@@ -1,0 +1,103 @@
+"""Paper §VI "load": broker throughput, MQTTFC batching + compression
+overhead, role-rearrangement message cost (the paper's "negligible cost"
+claim quantified)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.broker import SimBroker
+from repro.core.client import SDFLMQClient
+from repro.core.coordinator import Coordinator, CoordinatorConfig
+from repro.core.mqttfc import MQTTFC
+from repro.core.stats import StatsSimulator
+
+
+def bench_raw_throughput(n_msgs: int = 20000):
+    b = SimBroker()
+    sink = [0]
+    b.connect("c", lambda m: sink.__setitem__(0, sink[0] + 1))
+    b.subscribe("c", "t/#")
+    payload = b"x" * 256
+    t0 = time.perf_counter()
+    for i in range(n_msgs):
+        b.publish("t/a", payload)
+    dt = time.perf_counter() - t0
+    return ("broker_throughput", dt / n_msgs * 1e6,
+            {"msgs_per_s": round(n_msgs / dt), "payload_b": 256})
+
+
+def bench_batching(payload_mb: float = 4.0):
+    b = SimBroker()
+    rx = MQTTFC(b, "rx", max_batch_bytes=64 * 1024)
+    tx = MQTTFC(b, "tx", max_batch_bytes=64 * 1024)
+    got = []
+    rx.bind("t/m", lambda a: got.append(a))
+    arr = np.random.default_rng(0).normal(
+        size=(int(payload_mb * 2**20 // 8),)).astype(np.float64)
+    t0 = time.perf_counter()
+    tx.call("t/m", arr)
+    dt = time.perf_counter() - t0
+    assert got and got[0].shape == arr.shape
+    return ("mqttfc_batching", dt * 1e6,
+            {"payload_mb": payload_mb, "parts": tx.parts_sent,
+             "mb_per_s": round(payload_mb / dt, 1)})
+
+
+def bench_compression():
+    b = SimBroker()
+    rx = MQTTFC(b, "rx")
+    txs = {}
+    out = {}
+    for codec in ("zlib", "zstd", "none"):
+        tx = MQTTFC(b, f"tx_{codec}", codec=codec,
+                    compress_threshold=0 if codec != "none" else 1 << 60)
+        # structured model-like payload (compressible)
+        arr = (np.arange(2**18, dtype=np.float32) % 997) / 997
+        rx.bind(f"t/{codec}", lambda a: None)
+        t0 = time.perf_counter()
+        tx.call(f"t/{codec}", arr)
+        dt = time.perf_counter() - t0
+        out[codec] = {"ratio": round(tx.raw_bytes_sent / max(tx.bytes_sent, 1), 2),
+                      "us": round(dt * 1e6)}
+    return ("mqttfc_compression", out["zlib"]["us"], out)
+
+
+def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
+    """Messages for role rearrangement vs full arrangement per round."""
+    b = SimBroker()
+    coord = Coordinator(b, CoordinatorConfig(role_policy="round_robin"))
+    sim = StatsSimulator([f"c{i}" for i in range(n_clients)])
+    cls = {f"c{i}": SDFLMQClient(f"c{i}", b, stats=sim.sample(f"c{i}", 0))
+           for i in range(n_clients)}
+    cls["c0"].create_fl_session("s", "m", rounds, n_clients, n_clients)
+    for i in range(1, n_clients):
+        cls[f"c{i}"].join_fl_session("s", "m")
+    p = {"w": np.zeros(4, np.float32)}
+    for r in range(rounds - 1):
+        for cid, cl in sorted(cls.items()):
+            cl.set_model("s", p, 1)
+        for cid, cl in sorted(cls.items()):
+            cl.send_local("s")
+        for cid, cl in sorted(cls.items()):
+            cl.signal_ready("s", stats=sim.sample(cid, r + 1))
+    per_round = coord.rearrangement_messages / max(rounds - 1, 1)
+    return ("role_rearrangement_cost", per_round,
+            {"clients": n_clients,
+             "initial_arrangement_msgs": coord.arrangement_messages,
+             "rearrangement_msgs_per_round": round(per_round, 1),
+             "fraction_of_full": round(per_round / n_clients, 3)})
+
+
+def run(verbose: bool = True):
+    rows = [bench_raw_throughput(), bench_batching(), bench_compression(),
+            bench_rearrangement_cost()]
+    if verbose:
+        for name, us, d in rows:
+            print(f"  {name}: {d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

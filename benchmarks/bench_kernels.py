@@ -1,0 +1,70 @@
+"""Kernel microbenches (CPU timings of the oracle/XLA paths + interpret-mode
+correctness cost; real MXU timings require a TPU — see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fedavg.ops import fedavg
+from repro.kernels.quant8.ops import quantize
+from repro.kernels.wkv6.ops import wkv
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(verbose: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fedavg: K clients x 8M params
+    for K, N in ((8, 1 << 22), (16, 1 << 22)):
+        x = jax.random.normal(key, (K, N), jnp.float32).astype(jnp.bfloat16)
+        w = jnp.arange(1.0, K + 1.0)
+        dt = _time(lambda a, b: fedavg(a, b, force="ref"), x, w)
+        gbps = (K * N * 2) / dt / 1e9
+        rows.append(("fedavg_xla", dt * 1e6,
+                     {"K": K, "N": N, "read_GBps": round(gbps, 1)}))
+
+    # quant8 throughput
+    y = jax.random.normal(key, (1 << 22,), jnp.float32)
+    dt = _time(lambda a: _q(a), y)
+    rows.append(("quant8_xla", dt * 1e6,
+                 {"N": y.size, "GBps": round(y.nbytes / dt / 1e9, 1)}))
+
+    # wkv chunked jnp (production CPU path)
+    B, T, H, dk, dv = 2, 512, 8, 64, 64
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (B, T, H, dk)) * 0.3
+    k2 = jax.random.normal(ks[1], (B, T, H, dk)) * 0.3
+    v2 = jax.random.normal(ks[2], (B, T, H, dv))
+    wl = -jnp.exp(jax.random.normal(ks[3], (B, T, H, dk)) * 0.3)
+    u = jnp.zeros((H, dk))
+    dt = _time(lambda *a: wkv(*a, chunk=64, force="ref")[0], r, k2, v2, wl, u)
+    toks = B * T
+    rows.append(("wkv6_chunked_xla", dt * 1e6,
+                 {"tokens": toks, "tok_per_s": round(toks / dt)}))
+
+    if verbose:
+        for name, us, d in rows:
+            print(f"  {name}: {us:.0f}us {d}")
+    return rows
+
+
+def _q(a):
+    q, s, _ = quantize(a, force="ref")
+    return q
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper §VI "memory": peak aggregator accumulator bytes per client —
+hierarchical clustering vs centralized aggregation.  SDFLMQ's claim: the
+per-node aggregation memory drops when the load is spread over heads."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.broker import SimBroker
+from repro.core.client import SDFLMQClient
+from repro.core.coordinator import Coordinator, CoordinatorConfig
+from repro.core.parameter_server import ParameterServer
+from repro.train.mlp import init_mlp
+
+
+def run_case(n_clients: int, hierarchical: bool):
+    b = SimBroker()
+    coord = Coordinator(b, CoordinatorConfig(
+        levels=3 if hierarchical else 1,
+        aggregator_ratio=0.3 if hierarchical else 1.0 / n_clients))
+    ps = ParameterServer(b)
+    cls = {f"c{i}": SDFLMQClient(f"c{i}", b) for i in range(n_clients)}
+    cls["c0"].create_fl_session("s", "m", 1, n_clients, n_clients)
+    for i in range(1, n_clients):
+        cls[f"c{i}"].join_fl_session("s", "m")
+    p = init_mlp()
+    for cid, cl in sorted(cls.items()):
+        cl.set_model("s", p, 1)
+    for cid, cl in sorted(cls.items()):
+        cl.send_local("s")
+    assert ps.get_global("s") is not None
+    peaks = [cl.models.get("s").peak_acc_bytes for cl in cls.values()]
+    return max(peaks), float(np.mean([x for x in peaks if x > 0]))
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in (8, 16, 32):
+        max_h, mean_h = run_case(n, True)
+        max_c, mean_c = run_case(n, False)
+        rows.append(("aggregator_peak_memory", max_h, {
+            "clients": n,
+            "hier_max_mb": round(max_h / 2**20, 2),
+            "central_max_mb": round(max_c / 2**20, 2),
+            "saving": round(1 - max_h / max(max_c, 1), 3),
+        }))
+        if verbose:
+            d = rows[-1][2]
+            print(f"  n={n}: hier peak {d['hier_max_mb']}MB vs central "
+                  f"{d['central_max_mb']}MB (saving {d['saving']:.0%})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

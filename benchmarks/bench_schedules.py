@@ -1,0 +1,43 @@
+"""Compiled aggregation-schedule comparison: collective wire bytes of the
+FL round step under tree / flat / rs_ag schedules (reads the dry-run JSON
+records when present; otherwise lowers a small cell in-process — requires
+the 512-device env, so prefer the dryrun artifacts)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(verbose: bool = True):
+    rows = []
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    recs = []
+    for path in sorted(glob.glob(os.path.join(base, "*train_4k*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    for r in recs:
+        rf = r["roofline"]
+        rows.append(("dryrun_train_cell", rf["collective_s"] * 1e6, {
+            "arch": r["arch"], "mesh": r["mesh"],
+            "schedule": r.get("schedule", "tree"),
+            "coll_GB": round(rf["collective_bytes"] / 1e9, 2),
+            "dominant": rf["dominant"],
+            "roofline_fraction": round(rf["roofline_fraction"], 3),
+        }))
+    if verbose:
+        for name, us, d in rows:
+            print(f"  {d['arch']:>18s} {d['mesh']:>8s} sched={d['schedule']:>5s} "
+                  f"coll={d['coll_GB']}GB dom={d['dominant']} "
+                  f"frac={d['roofline_fraction']}")
+    if not rows:
+        rows.append(("dryrun_train_cell", 0.0,
+                     {"note": "run launch.dryrun --all first"}))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,116 @@
+"""Paper Fig. 8: total processing delay of 10 FL rounds — 2-layer
+hierarchical SDFL (30% aggregators) vs centralized single aggregator, for
+growing client counts.
+
+Two measurements per point:
+  * modeled delay — critical-path network/compute model over the coordinator's
+    actual cluster tree (per-client bandwidth/speed from the stats simulator;
+    aggregation is parallel across heads, sequential per input);
+  * wall delay   — real in-process time of moving the payloads through the
+    broker (broker load, serialization, batching).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.broker import SimBroker
+from repro.core.client import SDFLMQClient
+from repro.core.clustering import ClusterTree
+from repro.core.coordinator import Coordinator, CoordinatorConfig
+from repro.core.parameter_server import ParameterServer
+from repro.core.stats import StatsSimulator
+from repro.train.mlp import init_mlp
+
+CLIENT_COUNTS = (5, 10, 15, 20, 25, 30)
+ROUNDS = 10
+# the wall-clock path moves the real (small) MLP through the broker; the
+# critical-path model prices a deep-net payload (paper §VII targets large
+# DNNs at the edge) so aggregation-point congestion is visible
+MODEL_BYTES = 10 * 2**20
+WIRE_MODEL = init_mlp()
+
+
+def modeled_round_delay(tree: ClusterTree, stats: dict) -> float:
+    """Critical path: trainer upload -> head RECEIVES K models over its own
+    downlink (the serialization the paper's motivation describes: a single
+    aggregation point congests) -> accumulate -> upload partial."""
+    AGG_PER_INPUT = 0.001          # s per model accumulate
+
+    def xfer_s(cid):
+        bw = stats[cid].bandwidth_mbps * 1e6 / 8
+        return MODEL_BYTES / bw
+
+    def train_s(cid):
+        return 0.25 / stats[cid].cpu_speed
+
+    ready = {cid: train_s(cid) for cid in tree.client_order}
+    for lvl in tree.levels:
+        for c in lvl:
+            arrive = max(ready.get(m, 0.0) + xfer_s(m) for m in c.members)
+            # K inbound models serialize on the head's link + K accumulates
+            recv = len(c.members) * (xfer_s(c.head) + AGG_PER_INPUT)
+            ready[c.head] = max(arrive, recv)
+    return ready[tree.root.head]
+
+
+def run_case(n_clients: int, hierarchical: bool, rounds: int = ROUNDS):
+    broker = SimBroker()
+    cfgc = CoordinatorConfig(
+        levels=3 if hierarchical else 1,
+        aggregator_ratio=0.3 if hierarchical else 1.0 / n_clients)
+    coord = Coordinator(broker, cfgc)
+    ps = ParameterServer(broker)
+    sim = StatsSimulator([f"c{i}" for i in range(n_clients)], seed=1)
+    clients = {}
+    for i in range(n_clients):
+        cid = f"c{i}"
+        clients[cid] = SDFLMQClient(cid, broker, stats=sim.sample(cid, 0))
+    clients["c0"].create_fl_session("fig8", "mlp", rounds, n_clients,
+                                    n_clients)
+    for i in range(1, n_clients):
+        clients[f"c{i}"].join_fl_session("fig8", "mlp")
+
+    p = WIRE_MODEL
+    modeled = 0.0
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        tree = coord.tree_of("fig8")
+        stats = coord.sessions["fig8"].contributors
+        modeled += modeled_round_delay(tree, stats)
+        for cid, cl in sorted(clients.items()):
+            cl.set_model("fig8", p, n_samples=1)
+        for cid, cl in sorted(clients.items()):
+            cl.send_local("fig8")
+        assert ps.get_global("fig8") is not None
+        for cid, cl in sorted(clients.items()):
+            cl.signal_ready("fig8", stats=sim.sample(cid, r + 1))
+    wall = time.perf_counter() - t0
+    return modeled, wall, broker.sys_stats()
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in CLIENT_COUNTS:
+        m_h, w_h, st_h = run_case(n, hierarchical=True)
+        m_c, w_c, st_c = run_case(n, hierarchical=False)
+        rows.append(("fig8_topology_delay", (w_h + w_c) / 2 * 1e6, {
+            "clients": n,
+            "hier_modeled_s": round(m_h, 3),
+            "central_modeled_s": round(m_c, 3),
+            "hier_wall_s": round(w_h, 3),
+            "central_wall_s": round(w_c, 3),
+            "hier_msgs": st_h["messages_sent"],
+            "central_msgs": st_c["messages_sent"],
+        }))
+        if verbose:
+            d = rows[-1][2]
+            print(f"  n={n:3d} modeled: hier {d['hier_modeled_s']:7.2f}s "
+                  f"central {d['central_modeled_s']:7.2f}s | wall: "
+                  f"hier {d['hier_wall_s']:.2f}s central {d['central_wall_s']:.2f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

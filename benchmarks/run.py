@@ -1,0 +1,40 @@
+"""Benchmark runner: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench detail)."""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+from benchmarks import (bench_broker, bench_convergence, bench_kernels,
+                        bench_memory, bench_schedules, bench_topology)
+
+SUITES = [
+    ("fig7_convergence", bench_convergence),
+    ("fig8_topology", bench_topology),
+    ("broker_load", bench_broker),
+    ("aggregator_memory", bench_memory),
+    ("kernels", bench_kernels),
+    ("schedules", bench_schedules),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite_name, mod in SUITES:
+        print(f"# --- {suite_name} ---", file=sys.stderr)
+        try:
+            rows = mod.run(verbose=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            rows = [(suite_name + "_FAILED", 0.0, {"error": str(e)[:200]})]
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{json.dumps(derived)}")
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_arch
+from repro.launch.dryrun import input_specs, lower_cell, make_schedule
+from repro.launch.mesh import make_production_mesh
+from repro.core.fl_step import build_fl_round_step
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-7b"
+shape_name = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+
+cfg = get_arch(arch)
+shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+specs = input_specs(cfg, shape, mesh)
+
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+def per_dev_bytes(st):
+    n = int(np.prod(st.shape)) if st.shape else 1
+    b = n * st.dtype.itemsize
+    spec = st.sharding.spec
+    div = 1
+    for p in spec:
+        if p is None:
+            continue
+        for ax in (p if isinstance(p, tuple) else (p,)):
+            div *= sizes[ax]
+    return b / div
+
+tot = 0.0
+items = []
+for path, st in jax.tree_util.tree_flatten_with_path(specs)[0]:
+    b = per_dev_bytes(st)
+    tot += b
+    items.append((b, jax.tree_util.keystr(path), st.shape, str(st.sharding.spec)))
+items.sort(reverse=True)
+print(f"TOTAL input bytes/device: {tot/2**30:.2f} GiB")
+for b, k, shp, sp in items[:12]:
+    print(f"  {b/2**30:7.3f} GiB {k} {shp} {sp}")
+
+# lower and find biggest temp allocations
+if shape.kind == "train":
+    sched = make_schedule(cfg, mesh)
+    fn = jax.jit(build_fl_round_step(cfg, mesh, sched), donate_argnums=(0,))
+    with mesh:
+        lowered = fn.lower(specs["state"], specs["batch"], specs["weights"])
+    comp = lowered.compile()
+    ma = comp.memory_analysis()
+    print("mem analysis:", {k: f"{getattr(ma, k)/2**30:.2f}GiB" for k in
+          ("argument_size_in_bytes", "output_size_in_bytes",
+           "temp_size_in_bytes", "alias_size_in_bytes")})
+
+    # find biggest tensors in optimized HLO
+    import re
+    from collections import Counter
+    txt = comp.as_text()
+    pat = re.compile(r"(bf16|f32|s32|pred|u32|s8)\[([0-9,]+)\]")
+    DT = {"bf16": 2, "f32": 4, "s32": 4, "pred": 1, "u32": 4, "s8": 1}
+    best = []
+    for line in txt.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * DT[dt]
+        if b > 2**30:
+            op = line.strip().split(" = ")[0][-60:]
+            kind = line.split(" = ")[1].split("(")[0][:60] if " = " in line else "?"
+            best.append((b, f"{dt}[{dims}]", kind.strip()))
+    best.sort(reverse=True)
+    seen = set()
+    for b, shp, kind in best:
+        if (shp, kind.split()[-1] if kind else "") in seen:
+            continue
+        seen.add((shp, kind.split()[-1] if kind else ""))
+        print(f"  TEMP {b/2**30:7.2f} GiB {shp:40s} {kind}")
+        if len(seen) > 15:
+            break

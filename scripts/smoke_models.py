@@ -1,0 +1,50 @@
+"""Fast dev loop: forward + prefill + decode for every arch's smoke config."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ShapeConfig, get_arch, list_archs, smoke_config
+from repro.dist import sharding as shd
+from repro.models import inputs, model_api
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 4, "train")
+
+
+def run(name: str) -> None:
+    cfg = smoke_config(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params = model_api.init_params(cfg, key)
+    n = shd.param_count(model_api.param_decls(cfg))
+    batch = inputs.make_batch(cfg, SMOKE_SHAPE, key)
+    mod = model_api.get_model(cfg)
+
+    logits, aux = jax.jit(lambda p, b: mod.forward(cfg, p, b))(params, batch)
+    assert logits.shape == (4, 32, ((cfg.vocab + 127) // 128) * 128), logits.shape
+    assert not jnp.isnan(logits).any(), "NaN in forward logits"
+
+    loss, parts = model_api.loss_fn(cfg, params, batch)
+    assert jnp.isfinite(loss), loss
+
+    # prefill + one decode step
+    pre_shape = ShapeConfig("smoke_pre", 32, 4, "prefill")
+    pbatch = inputs.make_batch(cfg, pre_shape, key)
+    plog, cache = jax.jit(lambda p, b: mod.prefill(cfg, p, b))(params, pbatch)
+    assert not jnp.isnan(plog).any(), "NaN in prefill logits"
+
+    dbatch = {"token": jnp.zeros((4, 1), jnp.int32),
+              "pos": jnp.full((4,), 32, jnp.int32)}
+    dlog, cache2 = jax.jit(lambda p, c, b: mod.decode_step(cfg, p, c, b))(
+        params, cache, dbatch)
+    assert not jnp.isnan(dlog).any(), "NaN in decode logits"
+    print(f"  OK {name:20s} params={n:,} loss={float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list_archs()
+    for nm in names:
+        try:
+            run(nm)
+        except Exception as e:
+            print(f"  FAIL {nm}: {type(e).__name__}: {e}")
+            raise

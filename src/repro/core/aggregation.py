@@ -1,0 +1,116 @@
+"""Aggregation data plane: weighted FedAvg over an FL-client mesh axis,
+executed as compiled collectives inside the FL round step.
+
+Schedules (all mathematically identical to flat weighted FedAvg —
+property-tested against the oracle in tests/test_aggregation.py):
+
+  * ``tree``       — paper-faithful hierarchical aggregation: one grouped
+                     psum per cluster level; non-participants contribute 0.
+  * ``flat``       — centralized baseline: one global psum.
+  * ``rs_ag``      — beyond-paper: reduce-scatter + all-gather on the
+                     largest divisible dim (bandwidth-optimal form).
+  * ``compressed`` — beyond-paper: int8 block-quantized all-gather (used on
+                     the DCN/pod hop where bandwidth is scarcest) with
+                     local weighted combine; introduces bounded error.
+
+All run under shard_map; the client axis is ``axis`` ("data" in replica
+mode, "pod" in shared mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.topology import AggSchedule
+from repro.dist.compression import dequantize_int8, quantize_int8
+
+
+def _weighted(p, w):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) * w.astype(jnp.float32), p)
+
+
+def _tree_psum(contrib, w, axis, schedule: AggSchedule):
+    """Hierarchical: grouped psum per level, masking non-heads above L0."""
+    total_w = w
+    for lvl, groups in enumerate(schedule.level_groups):
+        groups_l = [list(g) for g in groups]
+        if lvl > 0:
+            mask_arr = jnp.asarray(schedule.head_masks[lvl - 1], jnp.float32)
+            my = mask_arr[jax.lax.axis_index(axis)]
+            contrib = jax.tree_util.tree_map(lambda x: x * my, contrib)
+            total_w = total_w * my
+        contrib = jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(x, axis, axis_index_groups=groups_l), contrib)
+        total_w = jax.lax.psum(total_w, axis, axis_index_groups=groups_l)
+    return contrib, total_w
+
+
+def _flat_psum(contrib, w, axis):
+    return (jax.tree_util.tree_map(lambda x: jax.lax.psum(x, axis), contrib),
+            jax.lax.psum(w, axis))
+
+
+def _rs_ag(contrib, w, axis, axis_size):
+    """reduce_scatter + all_gather on the largest divisible dimension;
+    falls back to psum for small/indivisible leaves."""
+    def one(x):
+        dims = [d for d in range(x.ndim) if x.shape[d] % axis_size == 0
+                and x.shape[d] >= axis_size]
+        if not dims or x.size < 4 * axis_size:
+            return jax.lax.psum(x, axis)
+        d = max(dims, key=lambda i: x.shape[i])
+        scat = jax.lax.psum_scatter(x, axis, scatter_dimension=d, tiled=True)
+        return jax.lax.all_gather(scat, axis, axis=d, tiled=True)
+    return (jax.tree_util.tree_map(one, contrib), jax.lax.psum(w, axis))
+
+
+def _compressed(contrib, w, axis, axis_size):
+    """int8-quantized all-gather + local combine (DCN hop compression)."""
+    def one(x):
+        q, scale = quantize_int8(x)
+        qs = jax.lax.all_gather(q, axis)            # (A, ...) int8
+        ss = jax.lax.all_gather(scale, axis)        # (A, ...) f32 scales
+        deq = dequantize_int8(qs, ss)
+        return jnp.sum(deq, axis=0)
+    return (jax.tree_util.tree_map(one, contrib), jax.lax.psum(w, axis))
+
+
+def aggregate_params(params, weights, mesh: Mesh, axis: str,
+                     schedule: AggSchedule, param_specs):
+    """params: client-stacked pytree (leading dim = n_clients, sharded over
+    ``axis``); weights: (n_clients,).  Returns the same structure with every
+    client's slot holding the identical weighted global mean."""
+    axis_size = mesh.shape[axis]
+
+    def body(w_local, *p_leaves):
+        p_local = jax.tree_util.tree_unflatten(treedef, p_leaves)
+        w = w_local.reshape(())                      # this client's weight
+        contrib = _weighted(p_local, w)
+        if schedule.kind == "tree":
+            summed, tw = _tree_psum(contrib, w, axis, schedule)
+        elif schedule.kind == "rs_ag":
+            summed, tw = _rs_ag(contrib, w, axis, axis_size)
+        elif schedule.kind == "compressed":
+            summed, tw = _compressed(contrib, w, axis, axis_size)
+        else:
+            summed, tw = _flat_psum(contrib, w, axis)
+        mean = jax.tree_util.tree_map(lambda x: x / tw, summed)
+        out = jax.tree_util.tree_map(
+            lambda m, p: m.astype(p.dtype), mean, p_local)
+        return tuple(jax.tree_util.tree_leaves(out))
+
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    spec_leaves = treedef.flatten_up_to(param_specs)
+    out_leaves = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis),) + tuple(spec_leaves),
+        out_specs=tuple(spec_leaves),
+        check_vma=False,
+    )(weights, *p_leaves)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -1,0 +1,218 @@
+"""SimBroker — an in-process, deterministic MQTT-semantics message broker.
+
+Implements the MQTT features SDFLMQ relies on:
+  * topic trie with ``+`` (single-level) and ``#`` (multi-level) wildcards,
+  * QoS 0 (fire-and-forget) and QoS 1 (at-least-once with acks + dedup),
+  * retained messages (late subscribers immediately receive the last value),
+  * last-will testament (published on abnormal disconnect -> the
+    coordinator's failure detector),
+  * ``$SYS``-style load counters (message/byte counts per topic class),
+  * broker **bridging** (paper §III-F): brokers forward matching topics to
+    each other with loop prevention via origin-broker tagging.
+
+Delivery is a reentrancy-safe FIFO pump: handlers may publish from within
+handlers; messages are processed in deterministic order.  This is the
+control-plane transport; tensors never travel through it in the TPU
+deployment (see DESIGN.md), though the host-side FedAvg path used by the
+paper-replication benchmarks does move (small) model payloads here exactly
+like the paper does over MQTT.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class Message:
+    topic: str
+    payload: bytes
+    qos: int = 0
+    retain: bool = False
+    mid: int = 0
+    origin_broker: str = ""
+    duplicate: bool = False
+
+
+@dataclass
+class Subscription:
+    client_id: str
+    topic_filter: str
+    qos: int = 0
+
+
+def topic_matches(topic_filter: str, topic: str) -> bool:
+    """MQTT wildcard matching: ``+`` one level, ``#`` trailing multi-level."""
+    f_parts = topic_filter.split("/")
+    t_parts = topic.split("/")
+    for i, f in enumerate(f_parts):
+        if f == "#":
+            return i == len(f_parts) - 1
+        if i >= len(t_parts):
+            return False
+        if f != "+" and f != t_parts[i]:
+            return False
+    return len(f_parts) == len(t_parts)
+
+
+@dataclass
+class _ClientSession:
+    client_id: str
+    on_message: Callable[[Message], None]
+    will: Optional[Message] = None
+    subscriptions: dict[str, int] = field(default_factory=dict)
+    connected: bool = True
+    inflight_acks: set = field(default_factory=set)
+    seen_mids: set = field(default_factory=set)
+
+
+class SysStats:
+    """$SYS-style counters."""
+
+    def __init__(self):
+        self.messages_received = 0
+        self.messages_sent = 0
+        self.bytes_received = 0
+        self.bytes_sent = 0
+        self.dropped_no_subscriber = 0
+        self.per_topic_class: dict[str, int] = defaultdict(int)
+        self.bridge_forwards = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "messages_received": self.messages_received,
+            "messages_sent": self.messages_sent,
+            "bytes_received": self.bytes_received,
+            "bytes_sent": self.bytes_sent,
+            "dropped_no_subscriber": self.dropped_no_subscriber,
+            "bridge_forwards": self.bridge_forwards,
+            "per_topic_class": dict(self.per_topic_class),
+        }
+
+
+class SimBroker:
+    _ids = itertools.count(1)
+
+    def __init__(self, name: str = "broker0"):
+        self.name = name
+        self._clients: dict[str, _ClientSession] = {}
+        self._retained: dict[str, Message] = {}
+        self._queue: deque = deque()
+        self._pumping = False
+        self._bridges: list[tuple["SimBroker", list[str]]] = []
+        self.stats = SysStats()
+        self.delivery_log: list[tuple[str, str, int]] = []  # (topic, client, size)
+        self.log_deliveries = False
+
+    # ---- connection lifecycle -------------------------------------------
+    def connect(self, client_id: str, on_message: Callable[[Message], None],
+                will: Optional[Message] = None) -> _ClientSession:
+        sess = _ClientSession(client_id, on_message, will)
+        self._clients[client_id] = sess
+        return sess
+
+    def disconnect(self, client_id: str, graceful: bool = True) -> None:
+        sess = self._clients.pop(client_id, None)
+        if sess is None:
+            return
+        sess.connected = False
+        if not graceful and sess.will is not None:
+            self.publish(sess.will.topic, sess.will.payload,
+                         qos=sess.will.qos, retain=sess.will.retain)
+
+    # ---- subscriptions ---------------------------------------------------
+    def subscribe(self, client_id: str, topic_filter: str, qos: int = 0) -> None:
+        sess = self._clients[client_id]
+        sess.subscriptions[topic_filter] = qos
+        # retained delivery
+        for topic, msg in list(self._retained.items()):
+            if topic_matches(topic_filter, topic):
+                self._deliver(sess, msg)
+
+    def unsubscribe(self, client_id: str, topic_filter: str) -> None:
+        self._clients[client_id].subscriptions.pop(topic_filter, None)
+
+    def subscriptions_of(self, client_id: str) -> list[str]:
+        return list(self._clients[client_id].subscriptions)
+
+    # ---- publishing ------------------------------------------------------
+    def publish(self, topic: str, payload: bytes, qos: int = 0,
+                retain: bool = False, _origin: str = "") -> int:
+        mid = next(self._ids)
+        msg = Message(topic, payload, qos, retain, mid,
+                      _origin or self.name)
+        self.stats.messages_received += 1
+        self.stats.bytes_received += len(payload)
+        self.stats.per_topic_class[topic.split("/")[1] if "/" in topic else topic] += 1
+        self._queue.append(msg)
+        self._pump()
+        return mid
+
+    def _pump(self) -> None:
+        if self._pumping:
+            return
+        self._pumping = True
+        try:
+            while self._queue:
+                msg = self._queue.popleft()
+                self._route(msg)
+        finally:
+            self._pumping = False
+
+    def _route(self, msg: Message) -> None:
+        if msg.retain:
+            if msg.payload:
+                self._retained[msg.topic] = msg
+            else:
+                self._retained.pop(msg.topic, None)
+        matched = False
+        for sess in list(self._clients.values()):
+            if not sess.connected:
+                continue
+            for filt, sub_qos in sess.subscriptions.items():
+                if topic_matches(filt, msg.topic):
+                    self._deliver(sess, msg, min(msg.qos, sub_qos))
+                    matched = True
+                    break
+        if not matched:
+            self.stats.dropped_no_subscriber += 1
+        # bridge forwarding with loop prevention
+        for other, filters in self._bridges:
+            if msg.origin_broker == other.name:
+                continue
+            if any(topic_matches(f, msg.topic) for f in filters):
+                self.stats.bridge_forwards += 1
+                other.publish(msg.topic, msg.payload, msg.qos, msg.retain,
+                              _origin=msg.origin_broker)
+
+    def _deliver(self, sess: _ClientSession, msg: Message, eff_qos: int = 0) -> None:
+        if eff_qos >= 1:
+            # at-least-once: dedup on (mid); ack bookkeeping
+            if msg.mid in sess.seen_mids:
+                return
+            sess.seen_mids.add(msg.mid)
+            sess.inflight_acks.add(msg.mid)
+        self.stats.messages_sent += 1
+        self.stats.bytes_sent += len(msg.payload)
+        if self.log_deliveries:
+            self.delivery_log.append((msg.topic, sess.client_id, len(msg.payload)))
+        sess.on_message(msg)
+        if eff_qos >= 1:
+            sess.inflight_acks.discard(msg.mid)  # implicit PUBACK
+
+    # ---- bridging --------------------------------------------------------
+    def bridge(self, other: "SimBroker", topics: Optional[list[str]] = None,
+               bidirectional: bool = True) -> None:
+        filters = topics or ["#"]
+        self._bridges.append((other, filters))
+        if bidirectional:
+            other._bridges.append((self, filters))
+
+    # ---- introspection ---------------------------------------------------
+    def sys_stats(self) -> dict:
+        return self.stats.snapshot()
+
+    def retained_topics(self) -> list[str]:
+        return sorted(self._retained)

@@ -1,0 +1,284 @@
+"""SDFLMQ client logic (paper §III-C, Listing 1 API).
+
+A client holds: a Role Arbiter (duties + topic subscriptions), a Model
+Controller (per-session model repository), and the aggregation service.
+The host-side FedAvg path moves *weighted partial sums* up the cluster tree
+through MQTTFC — mathematically identical to flat FedAvg (property-tested).
+A trainer publishes its raw model into its leaf cluster's topic; cluster
+heads (which subscribe to their own topic, so their own model self-delivers)
+accumulate ``expected`` inputs and forward the partial sum to the parent
+cluster; the root divides once and publishes the global model (retained).
+
+In the TPU deployment the same tree is executed as compiled collectives
+(core/aggregation.py); this class is the paper-faithful path used by the
+examples and the paper-replication benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import topics as T
+from repro.core.broker import SimBroker
+from repro.core.mqttfc import MQTTFC, raw_handler
+from repro.core.roles import ClientAssignment, RoleArbiter
+from repro.core.stats import ClientStats, local_stats
+
+Params = dict[str, np.ndarray]
+
+
+def weighted_add(acc: Optional[Params], p: Params, w: float) -> Params:
+    if acc is None:
+        return {k: np.asarray(v, np.float64) * w for k, v in p.items()}
+    for k, v in p.items():
+        acc[k] = acc[k] + np.asarray(v, np.float64) * w
+    return acc
+
+
+@dataclass
+class _Accumulator:
+    acc: Optional[Params] = None
+    weight: float = 0.0
+    received: int = 0
+    flushed: bool = False
+
+
+@dataclass
+class _SessionCtx:
+    session_id: str
+    model_name: str
+    params: Optional[Params] = None
+    weight: float = 1.0                      # FedAvg weight (sample count)
+    global_version: int = 0
+    round_idx: int = 0
+    accs: dict[str, _Accumulator] = field(default_factory=dict)
+    tree: Optional[dict] = None
+    terminated: bool = False
+    peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
+
+    def acc_for(self, cluster_id: str) -> _Accumulator:
+        return self.accs.setdefault(cluster_id, _Accumulator())
+
+    def reset_round(self, round_idx: int) -> None:
+        self.round_idx = round_idx
+        self.accs.clear()
+
+
+class ModelController:
+    """Per-session model repository (paper: tracks local + global updates)."""
+
+    def __init__(self):
+        self.sessions: dict[str, _SessionCtx] = {}
+
+    def get(self, sid: str) -> _SessionCtx:
+        return self.sessions[sid]
+
+    def ensure(self, sid: str, model_name: str) -> _SessionCtx:
+        if sid not in self.sessions:
+            self.sessions[sid] = _SessionCtx(sid, model_name)
+        return self.sessions[sid]
+
+
+class SDFLMQClient:
+    """Mirrors the paper's SDFLMQ_Client (Listing 1)."""
+
+    def __init__(self, client_id: str, broker: SimBroker,
+                 preferred_role: str = "trainer",
+                 stats: Optional[ClientStats] = None):
+        self.client_id = client_id
+        self.preferred_role = preferred_role
+        self.stats = stats or local_stats(client_id)
+        self.fc = MQTTFC(broker, client_id, will_topic=T.will(client_id),
+                         will_payload=_will_payload(client_id))
+        self.arbiter = RoleArbiter(client_id)
+        self.models = ModelController()
+        self.on_global_update: Optional[Callable] = None
+        self.on_round_start: Optional[Callable] = None
+        self.fc.bind(T.client_ctrl(client_id), self._on_ctrl)
+
+    # ------------------------------------------------------------------
+    # Paper Listing-1 API
+    # ------------------------------------------------------------------
+    def create_fl_session(self, session_id: str, model_name: str,
+                          fl_rounds: int, session_capacity_min: int,
+                          session_capacity_max: int,
+                          session_time_s: float = 3600.0,
+                          waiting_time_s: float = 120.0,
+                          preferred_role: Optional[str] = None) -> None:
+        self.models.ensure(session_id, model_name)
+        self._subscribe_session(session_id)
+        self.fc.call(T.coord("create_session"), session_id, model_name,
+                     self.client_id, fl_rounds, session_capacity_min,
+                     session_capacity_max, session_time_s, waiting_time_s,
+                     preferred_role or self.preferred_role,
+                     self.stats.to_dict())
+
+    def join_fl_session(self, session_id: str, model_name: str,
+                        fl_rounds: int = 0,
+                        preferred_role: Optional[str] = None) -> None:
+        self.models.ensure(session_id, model_name)
+        self._subscribe_session(session_id)
+        self.fc.call(T.coord("join_session"), session_id, self.client_id,
+                     model_name, fl_rounds,
+                     preferred_role or self.preferred_role,
+                     self.stats.to_dict())
+
+    def set_model(self, session_id: str, params: Params,
+                  n_samples: int = 1) -> None:
+        ctx = self.models.get(session_id)
+        ctx.params = {k: np.asarray(v) for k, v in params.items()}
+        ctx.weight = float(n_samples)
+
+    def get_model(self, session_id: str) -> Params:
+        return self.models.get(session_id).params
+
+    def send_local(self, session_id: str) -> None:
+        """Publish the locally trained model for global updating.  The
+        cluster head's own copy self-delivers via its subscription."""
+        ctx = self.models.get(session_id)
+        asg = self.arbiter.assignment
+        if asg is None or asg.train_cluster is None:
+            raise RuntimeError(f"{self.client_id}: no trainer assignment yet")
+        self.fc.call(T.cluster_agg(session_id, asg.train_cluster),
+                     {"params": ctx.params, "weight": ctx.weight,
+                      "sender": self.client_id, "partial": False})
+
+    def wait_global_update(self, session_id: str) -> Params:
+        """Synchronous in the simulated broker: delivery already happened by
+        the time send_local returned on the last contributor."""
+        return self.models.get(session_id).params
+
+    def leave(self, session_id: str) -> None:
+        self.fc.call(T.coord("leave_session"), session_id, self.client_id)
+
+    def fail(self) -> None:
+        """Simulate abnormal death -> broker fires the LWT."""
+        self.fc.close(graceful=False)
+
+    def signal_ready(self, session_id: str,
+                     stats: Optional[ClientStats] = None,
+                     metrics: Optional[dict] = None) -> None:
+        """Round-status update to the coordinator (paper §III-E4)."""
+        st = (stats or self.stats).to_dict()
+        self.fc.call(T.coord("client_ready"), session_id, self.client_id,
+                     st, metrics or {})
+
+    # ------------------------------------------------------------------
+    # Control-plane handlers
+    # ------------------------------------------------------------------
+    def _subscribe_session(self, session_id: str) -> None:
+        self.fc.subscribe_raw(T.session_status(session_id),
+                              raw_handler(self._on_status))
+        self.fc.subscribe_raw(T.global_model(session_id),
+                              raw_handler(self._on_global))
+
+    def _on_ctrl(self, payload: dict) -> None:
+        ev = payload.get("event")
+        if ev == "role_assignment":
+            asg = ClientAssignment.from_dict(payload["assignment"])
+            to_unsub, to_sub = self.arbiter.update(asg)
+            for t in to_unsub:
+                self.fc.unbind(t)
+            for t in to_sub:
+                self.fc.subscribe_raw(t, raw_handler(self._on_cluster_input))
+
+    def _on_status(self, topic: str, payload) -> None:
+        body = _body(payload)
+        sid = topic.split("/")[2]
+        ctx = self.models.sessions.get(sid)
+        if ctx is None:
+            return
+        ev = body.get("event")
+        if ev == "topology":
+            ctx.tree = body.get("tree")
+        elif ev == "round_start":
+            ctx.reset_round(body.get("round", ctx.round_idx))
+            if self.on_round_start:
+                self.on_round_start(sid, ctx.round_idx)
+        elif ev == "flush":
+            lvl = body.get("level")
+            for cid in list(ctx.accs):
+                duty = self.arbiter.duty_for(cid)
+                if duty is not None and (lvl is None or duty.level == lvl):
+                    self._flush(sid, cid, force=True)
+        elif ev == "session_terminated":
+            ctx.terminated = True
+
+    def _on_cluster_input(self, topic: str, payload) -> None:
+        """Aggregation service: accumulate weighted inputs for one duty."""
+        body = _body(payload)
+        parts = topic.split("/")       # sdflmq/session/<sid>/cluster/<cid>/agg
+        sid, cluster_id = parts[2], parts[4]
+        ctx = self.models.sessions.get(sid)
+        duty = self.arbiter.duty_for(cluster_id)
+        if ctx is None or duty is None:
+            return
+        a = ctx.acc_for(cluster_id)
+        if a.flushed:        # new aggregation cycle starts on first input
+            a.acc, a.weight, a.received, a.flushed = None, 0.0, 0, False
+        w = float(body["weight"])
+        scale = 1.0 if body.get("partial") else w
+        a.acc = weighted_add(a.acc, body["params"], scale)
+        a.weight += w
+        a.received += 1
+        ctx.peak_acc_bytes = max(ctx.peak_acc_bytes, _acc_bytes(ctx))
+        if a.received >= duty.expected:
+            self._flush(sid, cluster_id)
+
+    def _flush(self, session_id: str, cluster_id: str, force: bool = False) -> None:
+        ctx = self.models.get(session_id)
+        duty = self.arbiter.duty_for(cluster_id)
+        a = ctx.accs.get(cluster_id)
+        if duty is None or a is None or a.acc is None or a.flushed:
+            return
+        if not force and a.received < duty.expected:
+            return
+        if duty.parent is not None:
+            self.fc.call(T.cluster_agg(session_id, duty.parent),
+                         {"params": a.acc, "weight": a.weight,
+                          "sender": self.client_id, "partial": True})
+        else:
+            glob = {k: (v / a.weight).astype(np.float32)
+                    for k, v in a.acc.items()}
+            self.fc.call(T.global_model(session_id),
+                         {"params": glob, "version": ctx.global_version + 1,
+                          "round": ctx.round_idx}, retain=True)
+        a.flushed = True
+        a.acc, a.weight, a.received = None, 0.0, 0
+
+    def _on_global(self, topic: str, payload) -> None:
+        body = _body(payload)
+        sid = topic.split("/")[2]
+        ctx = self.models.sessions.get(sid)
+        if ctx is None:
+            return
+        ctx.params = {k: np.asarray(v) for k, v in body["params"].items()}
+        ctx.global_version = body.get("version", ctx.global_version + 1)
+        if self.on_global_update:
+            self.on_global_update(sid, ctx.params, ctx.global_version)
+
+
+def _body(payload):
+    if isinstance(payload, dict) and "a" in payload:
+        args = payload["a"]
+        return args[0] if args else {}
+    return payload
+
+
+def _acc_bytes(ctx: _SessionCtx) -> int:
+    total = 0
+    for a in ctx.accs.values():
+        if a.acc is not None:
+            total += sum(v.nbytes for v in a.acc.values())
+    return total
+
+
+def _will_payload(client_id: str) -> bytes:
+    # a minimal MQTTFC frame announcing the dead client
+    from repro.core import mqttfc as F
+    import msgpack
+    body = F.encode({"a": [client_id], "k": {}, "s": client_id})
+    header = msgpack.packb((client_id, 0, 0, 1, 0, "zlib"))
+    return len(header).to_bytes(4, "big") + header + body

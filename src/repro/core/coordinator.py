@@ -1,0 +1,232 @@
+"""Coordinator logic (paper §III-D/E): session management, clustering
+engine, role (re)arrangement, role optimization, failure detection.
+
+The coordinator never touches model tensors — it only consumes metadata
+(client stats, readiness) and emits routing/placement metadata (role
+assignments, cluster topology), exactly as in the paper.  Role
+*rearrangement* messages go only to clients whose assignment changed.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core import topics as T
+from repro.core.broker import SimBroker
+from repro.core.clustering import ClusterTree, build_tree, validate_tree
+from repro.core.mqttfc import MQTTFC
+from repro.core.role_optimizer import get_policy
+from repro.core.roles import ClientAssignment
+from repro.core.session import FLSession, SessionState
+from repro.core.stats import ClientStats
+
+
+@dataclass
+class CoordinatorConfig:
+    role_policy: str = "memory_aware"
+    aggregator_ratio: float = 0.3
+    levels: int = 3
+    round_deadline_s: float = 0.0
+
+
+class Coordinator:
+    def __init__(self, broker: SimBroker, cfg: Optional[CoordinatorConfig] = None,
+                 client_id: str = "coordinator"):
+        self.cfg = cfg or CoordinatorConfig()
+        self.fc = MQTTFC(broker, client_id)
+        self.sessions: dict[str, FLSession] = {}
+        self.trees: dict[str, ClusterTree] = {}
+        self.assignments: dict[str, dict[str, ClientAssignment]] = {}
+        self.failed_clients: set[str] = set()
+        self.on_round_complete: Optional[Callable] = None   # hook for driver
+        self.rearrangement_messages = 0     # paper's "negligible cost" claim
+        self.arrangement_messages = 0
+        # RFC bindings
+        self.fc.bind(T.coord("create_session"), self._create_session)
+        self.fc.bind(T.coord("join_session"), self._join_session)
+        self.fc.bind(T.coord("leave_session"), self._leave_session)
+        self.fc.bind(T.coord("client_ready"), self._client_ready)
+        self.fc.subscribe_raw(f"{T.ROOT}/will/+", self._on_will_raw)
+
+    # ------------------------------------------------------------------
+    # RFC endpoints
+    # ------------------------------------------------------------------
+    def _create_session(self, session_id: str, model_name: str, creator: str,
+                        fl_rounds: int, capacity_min: int, capacity_max: int,
+                        session_time_s: float = 3600.0,
+                        waiting_time_s: float = 120.0,
+                        preferred_role: str = "aggregator",
+                        stats: Optional[dict] = None) -> None:
+        if session_id in self.sessions:
+            # paper: first create wins; later requests are dumped
+            return
+        s = FLSession(session_id, model_name, creator, fl_rounds,
+                      capacity_min, capacity_max, session_time_s,
+                      waiting_time_s,
+                      round_deadline_s=self.cfg.round_deadline_s)
+        self.sessions[session_id] = s
+        st = ClientStats.from_dict(stats) if stats else ClientStats(creator)
+        s.join(creator, st, preferred_role)
+        self._notify(creator, {"event": "session_created",
+                               "session": s.describe()})
+        self._maybe_start(session_id)
+
+    def _join_session(self, session_id: str, client_id: str, model_name: str,
+                      fl_rounds: int = 0, preferred_role: str = "trainer",
+                      stats: Optional[dict] = None) -> None:
+        s = self.sessions.get(session_id)
+        if s is None or s.model_name != model_name:
+            self._notify(client_id, {"event": "join_rejected",
+                                     "session_id": session_id})
+            return
+        st = ClientStats.from_dict(stats) if stats else ClientStats(client_id)
+        ok = s.join(client_id, st, preferred_role)
+        self._notify(client_id, {"event": "joined" if ok else "join_rejected",
+                                 "session": s.describe()})
+        if ok and s.state == SessionState.RUNNING:
+            self._arrange(session_id, rearrange=True)   # elastic join
+        else:
+            self._maybe_start(session_id)
+
+    def _leave_session(self, session_id: str, client_id: str) -> None:
+        s = self.sessions.get(session_id)
+        if s:
+            s.leave(client_id)
+            if s.state == SessionState.RUNNING:
+                self._arrange(session_id, rearrange=True)
+
+    def _client_ready(self, session_id: str, client_id: str,
+                      stats: Optional[dict] = None,
+                      metrics: Optional[dict] = None) -> None:
+        """Round-status update (paper §III-E4): client finished its role's
+        work; carries fresh system stats for the optimizer."""
+        s = self.sessions.get(session_id)
+        if s is None or s.state != SessionState.RUNNING:
+            return
+        st = ClientStats.from_dict(stats) if stats else None
+        s.mark_ready(client_id, st)
+        if s.all_ready:
+            self._finish_round(session_id)
+
+    def _on_will_raw(self, topic: str, payload) -> None:
+        """Failure detector: LWT fired for a dead client."""
+        args = payload["a"] if isinstance(payload, dict) else [payload]
+        client_id = args[0] if args else topic.rsplit("/", 1)[-1]
+        self.client_failed(client_id)
+
+    # ------------------------------------------------------------------
+    # Orchestration
+    # ------------------------------------------------------------------
+    def _maybe_start(self, session_id: str) -> None:
+        s = self.sessions[session_id]
+        if s.state == SessionState.WAITING and s.full:
+            self.start_session(session_id)
+
+    def expire_waiting(self, session_id: str) -> bool:
+        """Waiting time elapsed (paper §III-E1): start at quorum even if not
+        full.  Returns whether the session started."""
+        s = self.sessions[session_id]
+        if s.state == SessionState.WAITING and s.quorum:
+            self.start_session(session_id)
+            return True
+        return False
+
+    def start_session(self, session_id: str) -> None:
+        """Quorum reached (or waiting time expired): cluster + arrange."""
+        s = self.sessions[session_id]
+        assert s.quorum, "cannot start below capacity_min"
+        s.state = SessionState.CLUSTERING
+        self._arrange(session_id, rearrange=False)
+        s.state = SessionState.RUNNING
+        self._broadcast_status(session_id, {"event": "round_start",
+                                            "round": s.round_idx})
+
+    def _rank_aggregators(self, s: FLSession) -> list[str]:
+        pol = get_policy(self.cfg.role_policy)
+        ranked = pol(s.contributors, s.round_idx)
+        # respect stated preferences: aggregator-volunteers first (paper:
+        # clients notify preference; coordinator decides suitability)
+        vols = [c for c in ranked if s.preferred_roles.get(c, "").startswith("agg")
+                or s.preferred_roles.get(c) == "trainer_aggregator"]
+        rest = [c for c in ranked if c not in vols]
+        return vols + rest if vols else ranked
+
+    def _arrange(self, session_id: str, rearrange: bool) -> None:
+        """(Re)build the cluster tree and send role assignments.  Initial
+        arrangement informs everyone; rearrangement only the changed."""
+        s = self.sessions[session_id]
+        clients = sorted(s.contributors)
+        if not clients:
+            s.state = SessionState.TERMINATED
+            return
+        ranked = self._rank_aggregators(s)
+        tree = build_tree(session_id, clients, ranked,
+                          self.cfg.aggregator_ratio, self.cfg.levels)
+        errs = validate_tree(tree, clients)
+        assert not errs, errs
+        new_assign = tree.assignments()
+        old_assign = self.assignments.get(session_id, {})
+        self.trees[session_id] = tree
+        self.assignments[session_id] = new_assign
+        for cid, asg in new_assign.items():
+            if rearrange and old_assign.get(cid) is not None \
+                    and old_assign[cid].to_dict() == asg.to_dict():
+                continue  # unchanged: not a single message (paper's point)
+            payload = {"event": "role_assignment", "assignment": asg.to_dict(),
+                       "round": s.round_idx}
+            self._notify(cid, payload)
+            if rearrange:
+                self.rearrangement_messages += 1
+            else:
+                self.arrangement_messages += 1
+        # publish the topology on the session topic (paper Fig. 5a)
+        self.fc.call(T.session_status(session_id),
+                     {"event": "topology", "tree": tree.describe(),
+                      "round": s.round_idx}, retain=True)
+        for cid, st in s.contributors.items():
+            if cid in new_assign and new_assign[cid].duties:
+                st.rounds_as_aggregator += 1
+
+    def _finish_round(self, session_id: str) -> None:
+        s = self.sessions[session_id]
+        s.next_round()
+        if self.on_round_complete:
+            self.on_round_complete(session_id, s.round_idx)
+        if s.state == SessionState.TERMINATED:
+            self._broadcast_status(session_id, {"event": "session_terminated",
+                                                "rounds": s.round_idx})
+            return
+        # role optimization + rearrangement for the new round
+        self._arrange(session_id, rearrange=True)
+        self._broadcast_status(session_id, {"event": "round_start",
+                                            "round": s.round_idx})
+
+    def force_round_end(self, session_id: str) -> None:
+        """Straggler deadline hit: flush aggregators LEVEL BY LEVEL (each
+        publish fully drains the broker queue, so level-l partials reach
+        level-l+1 heads before their own flush arrives)."""
+        tree = self.trees.get(session_id)
+        n_levels = len(tree.levels) if tree else 1
+        for lvl in range(n_levels):
+            self.fc.call(T.session_status(session_id),
+                         {"event": "flush", "level": lvl})
+
+    def client_failed(self, client_id: str) -> None:
+        self.failed_clients.add(client_id)
+        for sid, s in self.sessions.items():
+            if client_id in s.contributors and s.state == SessionState.RUNNING:
+                s.leave(client_id)
+                self._arrange(sid, rearrange=True)
+                if s.all_ready and s.contributors:
+                    self._finish_round(sid)
+
+    # ------------------------------------------------------------------
+    def _notify(self, client_id: str, payload: dict) -> None:
+        self.fc.call(T.client_ctrl(client_id), payload)
+
+    def _broadcast_status(self, session_id: str, payload: dict) -> None:
+        self.fc.call(T.session_status(session_id), payload)
+
+    def tree_of(self, session_id: str) -> ClusterTree:
+        return self.trees[session_id]

@@ -1,0 +1,192 @@
+"""The compiled FL round step — SDFLMQ's data plane.
+
+One call = one federated round over all clients mapped onto the mesh:
+  1. per-client local training step(s)  (vmap over the client axis),
+  2. hierarchical weighted aggregation  (schedule from the coordinator's
+     cluster tree via core/topology.py),
+  3. implicit global broadcast          (every client slot ends up with the
+                                         identical global model).
+
+Client -> mesh mapping: client i owns index i of the FL client axis
+("data" in replica mode, "pod" in shared mode); the coordinator's
+``tree.client_order`` must be in the same order (the driver guarantees it).
+Compiled steps are cached per AggSchedule signature — switching roles
+between rounds costs a dictionary lookup once a topology has been seen,
+the compiled-schedule analogue of the paper's re-subscription cheapness.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.aggregation import aggregate_params
+from repro.core.topology import AggSchedule
+from repro.dist import sharding as shd
+from repro.models import inputs as minputs
+from repro.models import model_api
+from repro.optim.api import apply_updates, make_optimizer
+
+
+def client_axis_for(cfg: ArchConfig, mesh: Mesh) -> Optional[str]:
+    ax = "data" if cfg.fl.mode == "replica" else "pod"
+    return ax if ax in mesh.axis_names else None
+
+
+def n_clients_for(cfg: ArchConfig, mesh: Mesh) -> int:
+    ax = client_axis_for(cfg, mesh)
+    return int(mesh.shape[ax]) if ax else 1
+
+
+# --------------------------------------------------------------------------
+# Specs / structs
+# --------------------------------------------------------------------------
+
+def fl_param_decls(cfg: ArchConfig, n_clients: int):
+    decls = model_api.param_decls(cfg)
+    if n_clients > 1:
+        decls = shd.prepend_axis(decls, n_clients, "clients")
+    return decls
+
+
+def fl_rules(cfg: ArchConfig, client_axis: Optional[str]):
+    rules = shd.rules_for(cfg.fl.mode)
+    rules["clients"] = client_axis
+    return rules
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh):
+    n = n_clients_for(cfg, mesh)
+    ax = client_axis_for(cfg, mesh)
+    return shd.specs_for(fl_param_decls(cfg, n), fl_rules(cfg, ax), mesh)
+
+
+def opt_state_specs(cfg: ArchConfig, mesh: Mesh, opt_name: str):
+    n = n_clients_for(cfg, mesh)
+    ax = client_axis_for(cfg, mesh)
+    decls = fl_param_decls(cfg, n)
+    rules = fl_rules(cfg, ax)
+    pspecs = shd.specs_for(decls, rules, mesh)
+    if opt_name == "sgdm":
+        return {"mu": pspecs}
+    if opt_name == "adamw":
+        return {"m": pspecs, "v": pspecs}
+    # adafactor: factoring applies to the PER-CLIENT shape (opt.init is
+    # vmapped over the clients axis when present)
+    lead = 1 if n > 1 else 0
+
+    def f(d, s):
+        parts = list(s) + [None] * (len(d.shape) - len(s))
+        if len(d.shape) - lead >= 2:
+            return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + [parts[-1]]))}
+        return {"v": P(*parts)}
+    fs = jax.tree_util.tree_map(f, decls, pspecs, is_leaf=shd.is_decl)
+    return {"f": fs}
+
+
+def state_specs(cfg: ArchConfig, mesh: Mesh, opt_name: str):
+    return {"params": param_specs(cfg, mesh),
+            "opt": opt_state_specs(cfg, mesh, opt_name),
+            "step": P()}
+
+
+def init_state(cfg: ArchConfig, mesh: Mesh, key, total_steps: int = 10000):
+    """Concrete, sharded train state (used by the real driver)."""
+    opt = make_optimizer(cfg, total_steps=total_steps)
+    n = n_clients_for(cfg, mesh)
+    decls = fl_param_decls(cfg, n)
+    rules = fl_rules(cfg, client_axis_for(cfg, mesh))
+    shardings = shd.shardings_for(decls, rules, mesh)
+
+    def mk():
+        params = shd.materialize(decls, key)
+        return params
+    params = jax.jit(mk, out_shardings=shardings)()
+    init = jax.vmap(opt.init) if n > 1 else opt.init
+    opt_state = jax.jit(init)(params)
+    return {"params": params, "opt": opt_state, "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: ArchConfig, mesh: Mesh, opt_name: str):
+    """ShapeDtypeStruct state with shardings attached (dry-run)."""
+    n = n_clients_for(cfg, mesh)
+    decls = fl_param_decls(cfg, n)
+    p_abs = shd.abstract(decls)
+    opt = make_optimizer(cfg)
+    init = jax.vmap(opt.init) if n > 1 else opt.init
+    o_abs = jax.eval_shape(init, p_abs)
+    specs = state_specs(cfg, mesh, opt.name)
+
+    def attach(struct_tree, spec_tree):
+        def one(st, sp):
+            return jax.ShapeDtypeStruct(st.shape, st.dtype,
+                                        sharding=NamedSharding(mesh, sp))
+        return jax.tree_util.tree_map(one, struct_tree, spec_tree)
+
+    return {
+        "params": attach(p_abs, specs["params"]),
+        "opt": attach(o_abs, specs["opt"]),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P())),
+    }
+
+
+# --------------------------------------------------------------------------
+# Step builders
+# --------------------------------------------------------------------------
+
+def build_fl_round_step(cfg: ArchConfig, mesh: Mesh, schedule: AggSchedule,
+                        total_steps: int = 10000,
+                        local_steps: Optional[int] = None):
+    """Returns fl_round_step(state, batch, weights) -> (state, metrics).
+
+    batch: client-stacked when n_clients>1 (leading dim = clients);
+    weights: (n_clients,) FedAvg weights (sample counts)."""
+    model = model_api.get_model(cfg)
+    opt = make_optimizer(cfg, total_steps=total_steps)
+    n = n_clients_for(cfg, mesh)
+    ax = client_axis_for(cfg, mesh)
+    E = local_steps if local_steps is not None else cfg.fl.local_steps
+    pspecs = param_specs(cfg, mesh)
+
+    def local_step(params, opt_state, step, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            model_api.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    def client_fn(params_c, opt_c, step, batch_c):
+        loss = jnp.float32(0.0)
+        for _ in range(E):
+            params_c, opt_c, loss = local_step(params_c, opt_c, step, batch_c)
+            step = step + 1
+        return params_c, opt_c, loss
+
+    def fl_round_step(state, batch, weights):
+        if n > 1:
+            params, opt_state, losses = jax.vmap(
+                client_fn, in_axes=(0, 0, None, 0))(
+                    state["params"], state["opt"], state["step"], batch)
+            params = aggregate_params(params, weights, mesh, ax,
+                                      schedule, pspecs)
+            loss = jnp.mean(losses)
+        else:
+            params, opt_state, loss = client_fn(
+                state["params"], state["opt"], state["step"], batch)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + E}
+        return new_state, {"loss": loss}
+
+    return fl_round_step
+
+
+def build_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        loss, parts = model_api.loss_fn(cfg, params, batch)
+        return parts["ce"]
+    return eval_step

@@ -1,0 +1,193 @@
+"""MQTT Fleet Control (MQTTFC) — the RFC layer SDFLMQ is built on
+(paper §III-B1, §IV).
+
+Remotely executable functions are bound to MQTT topics; any client can
+publish to the function topic with arguments in the payload, and the bound
+function runs on every subscriber.  Large payloads (model parameter sets)
+are serialized (msgpack with numpy extension), optionally compressed
+(zlib — as in the paper — or zstd), split into fixed-size batches with
+``batch_id``/part counters, and reassembled at the receiver.
+"""
+from __future__ import annotations
+
+import itertools
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import msgpack
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+from repro.core.broker import Message, SimBroker
+
+_NUMPY_EXT = 42
+
+
+def _default(obj):
+    if isinstance(obj, np.ndarray):
+        return msgpack.ExtType(_NUMPY_EXT, msgpack.packb(
+            (obj.dtype.str, obj.shape, obj.tobytes())))
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _ext_hook(code, data):
+    if code == _NUMPY_EXT:
+        dtype, shape, buf = msgpack.unpackb(data)
+        return np.frombuffer(buf, dtype=np.dtype(dtype)).reshape(shape).copy()
+    return msgpack.ExtType(code, data)
+
+
+def encode(obj: Any) -> bytes:
+    return msgpack.packb(obj, default=_default, use_bin_type=True)
+
+
+def decode(data: bytes) -> Any:
+    return msgpack.unpackb(data, ext_hook=_ext_hook, raw=False,
+                           strict_map_key=False)
+
+
+def compress(data: bytes, codec: str) -> bytes:
+    if codec == "zlib":
+        return zlib.compress(data, level=3)
+    if codec == "zstd" and _zstd is not None:
+        return _zstd.ZstdCompressor(level=3).compress(data)
+    return data
+
+
+def decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec == "zstd" and _zstd is not None:
+        return _zstd.ZstdDecompressor().decompress(data)
+    return data
+
+
+@dataclass
+class _Reassembly:
+    n_parts: int
+    parts: dict[int, bytes] = field(default_factory=dict)
+
+    def add(self, idx: int, data: bytes) -> Optional[bytes]:
+        self.parts[idx] = data
+        if len(self.parts) == self.n_parts:
+            return b"".join(self.parts[i] for i in range(self.n_parts))
+        return None
+
+
+class MQTTFC:
+    """Per-client fleet-control endpoint."""
+
+    _call_ids = itertools.count(1)
+
+    def __init__(self, broker: SimBroker, client_id: str,
+                 max_batch_bytes: int = 64 * 1024,
+                 codec: str = "zlib",
+                 compress_threshold: int = 4 * 1024,
+                 will_topic: Optional[str] = None,
+                 will_payload: bytes = b""):
+        self.broker = broker
+        self.client_id = client_id
+        self.max_batch_bytes = max_batch_bytes
+        self.codec = codec
+        self.compress_threshold = compress_threshold
+        self._fns: dict[str, Callable] = {}
+        self._buffers: dict[tuple, _Reassembly] = {}
+        will = Message(will_topic, will_payload, qos=1) if will_topic else None
+        self.session = broker.connect(client_id, self._on_message, will=will)
+        # wire-stats (paper evaluates load): logical calls vs wire messages
+        self.calls_sent = 0
+        self.parts_sent = 0
+        self.bytes_sent = 0
+        self.raw_bytes_sent = 0
+
+    # ---- binding ---------------------------------------------------------
+    def bind(self, topic: str, fn: Callable, qos: int = 1) -> None:
+        """Bind a remotely executable function to a topic."""
+        self._fns[topic] = fn
+        self.broker.subscribe(self.client_id, topic, qos=qos)
+
+    def unbind(self, topic: str) -> None:
+        self._fns.pop(topic, None)
+        self.broker.unsubscribe(self.client_id, topic)
+
+    def subscribe_raw(self, topic_filter: str, fn: Callable, qos: int = 1) -> None:
+        """Subscribe with wildcard support; fn receives (topic, payload)."""
+        if not getattr(fn, "_raw", False):
+            fn = raw_handler(fn)
+        self._fns[topic_filter] = fn
+        self.broker.subscribe(self.client_id, topic_filter, qos=qos)
+
+    # ---- calling ---------------------------------------------------------
+    def call(self, topic: str, *args, qos: int = 1, retain: bool = False,
+             **kwargs) -> None:
+        """Invoke the function bound to ``topic`` on all subscribers."""
+        body = encode({"a": list(args), "k": kwargs, "s": self.client_id})
+        self.raw_bytes_sent += len(body)
+        flags = 0
+        if len(body) >= self.compress_threshold:
+            comp = compress(body, self.codec)
+            if len(comp) < len(body):
+                body, flags = comp, 1
+        call_id = next(self._call_ids)
+        n_parts = max(1, -(-len(body) // self.max_batch_bytes))
+        self.calls_sent += 1
+        for i in range(n_parts):
+            chunk = body[i * self.max_batch_bytes:(i + 1) * self.max_batch_bytes]
+            header = msgpack.packb((self.client_id, call_id, i, n_parts, flags,
+                                    self.codec))
+            frame = len(header).to_bytes(4, "big") + header + chunk
+            self.parts_sent += 1
+            self.bytes_sent += len(frame)
+            self.broker.publish(topic, frame, qos=qos, retain=retain)
+
+    # ---- dispatch --------------------------------------------------------
+    def _on_message(self, msg: Message) -> None:
+        hlen = int.from_bytes(msg.payload[:4], "big")
+        sender, call_id, idx, n_parts, flags, codec = msgpack.unpackb(
+            msg.payload[4:4 + hlen])
+        chunk = msg.payload[4 + hlen:]
+        key = (sender, call_id, msg.topic)
+        if n_parts == 1:
+            body = chunk
+        else:
+            buf = self._buffers.setdefault(key, _Reassembly(n_parts))
+            body = buf.add(idx, chunk)
+            if body is None:
+                return
+            del self._buffers[key]
+        if flags & 1:
+            body = decompress(body, codec)
+        payload = decode(body)
+        fn = self._fns.get(msg.topic)
+        if fn is None:  # wildcard-bound handlers
+            for filt, f in self._fns.items():
+                from repro.core.broker import topic_matches
+                if topic_matches(filt, msg.topic):
+                    fn = f
+                    break
+        if fn is None:
+            return
+        if getattr(fn, "_raw", False):
+            fn(msg.topic, payload)
+        else:
+            fn(*payload["a"], **payload["k"])
+
+    def close(self, graceful: bool = True) -> None:
+        self.broker.disconnect(self.client_id, graceful=graceful)
+
+
+def raw_handler(fn):
+    """Mark a handler as wanting (topic, payload) instead of (*args)."""
+    def wrapper(topic, payload):
+        return fn(topic, payload)
+    wrapper._raw = True
+    return wrapper

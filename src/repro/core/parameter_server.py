@@ -1,0 +1,42 @@
+"""Parameter Server logic (paper §III-B2): repository of global models for
+all sessions handled by the coordinator + global update synchronizer.
+Listens on the public global-model topics; can run co-located with the
+coordinator or standalone.  Retained MQTT messages double as the
+"synchronizer": any client (re)subscribing immediately receives the latest
+global model — which is also the crash-recovery path for rejoining nodes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import topics as T
+from repro.core.broker import SimBroker
+from repro.core.mqttfc import MQTTFC, raw_handler
+
+
+class ParameterServer:
+    def __init__(self, broker: SimBroker, client_id: str = "param_server"):
+        self.fc = MQTTFC(broker, client_id)
+        self.store: dict[str, dict] = {}       # sid -> {params, version, round}
+        self.history: dict[str, list[int]] = {}
+        self.fc.subscribe_raw(f"{T.ROOT}/session/+/global",
+                              raw_handler(self._on_global))
+
+    def _on_global(self, topic: str, payload) -> None:
+        args = payload["a"] if isinstance(payload, dict) and "a" in payload else [payload]
+        body = args[0]
+        sid = topic.split("/")[2]
+        self.store[sid] = {
+            "params": {k: np.asarray(v) for k, v in body["params"].items()},
+            "version": body.get("version", 0),
+            "round": body.get("round", 0),
+        }
+        self.history.setdefault(sid, []).append(body.get("version", 0))
+
+    def get_global(self, sid: str) -> Optional[dict]:
+        return self.store.get(sid)
+
+    def versions(self, sid: str) -> list[int]:
+        return self.history.get(sid, [])

@@ -1,0 +1,92 @@
+"""FL session state machine (paper §III-E1, Fig. 4).
+
+Lifecycle: CREATED -> WAITING (for contributors) -> CLUSTERING -> RUNNING
+(round loop) -> TERMINATED (round budget or wall-clock expiry).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.stats import ClientStats
+
+
+class SessionState(str, enum.Enum):
+    CREATED = "created"
+    WAITING = "waiting"
+    CLUSTERING = "clustering"
+    RUNNING = "running"
+    TERMINATED = "terminated"
+
+
+@dataclass
+class FLSession:
+    session_id: str
+    model_name: str
+    creator: str
+    fl_rounds: int
+    capacity_min: int
+    capacity_max: int
+    session_time_s: float = 3600.0
+    waiting_time_s: float = 120.0
+    state: SessionState = SessionState.CREATED
+    round_idx: int = 0
+    contributors: dict[str, ClientStats] = field(default_factory=dict)
+    preferred_roles: dict[str, str] = field(default_factory=dict)
+    ready: set = field(default_factory=set)
+    created_at: float = 0.0
+    round_deadline_s: float = 0.0      # straggler deadline (0 = none)
+    history: list[dict] = field(default_factory=list)
+
+    def join(self, client_id: str, stats: ClientStats,
+             preferred_role: str = "trainer") -> bool:
+        if self.state not in (SessionState.CREATED, SessionState.WAITING,
+                              SessionState.RUNNING):
+            return False   # elastic join mid-session is allowed (RUNNING)
+        if len(self.contributors) >= self.capacity_max:
+            return False
+        self.contributors[client_id] = stats
+        self.preferred_roles[client_id] = preferred_role
+        if self.state != SessionState.RUNNING:
+            self.state = SessionState.WAITING
+        return True
+
+    def leave(self, client_id: str) -> None:
+        self.contributors.pop(client_id, None)
+        self.preferred_roles.pop(client_id, None)
+        self.ready.discard(client_id)
+
+    @property
+    def full(self) -> bool:
+        return len(self.contributors) >= self.capacity_max
+
+    @property
+    def quorum(self) -> bool:
+        return len(self.contributors) >= self.capacity_min
+
+    def mark_ready(self, client_id: str, stats: Optional[ClientStats] = None) -> None:
+        if client_id in self.contributors:
+            self.ready.add(client_id)
+            if stats is not None:
+                self.contributors[client_id] = stats
+
+    @property
+    def all_ready(self) -> bool:
+        return self.ready >= set(self.contributors)
+
+    def next_round(self) -> None:
+        self.history.append({"round": self.round_idx,
+                             "participants": sorted(self.ready)})
+        self.round_idx += 1
+        self.ready.clear()
+        if self.round_idx >= self.fl_rounds:
+            self.state = SessionState.TERMINATED
+
+    def describe(self) -> dict:
+        return {
+            "session_id": self.session_id, "model_name": self.model_name,
+            "state": self.state.value, "round": self.round_idx,
+            "fl_rounds": self.fl_rounds,
+            "contributors": sorted(self.contributors),
+        }

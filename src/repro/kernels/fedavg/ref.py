@@ -1,0 +1,27 @@
+"""Oracle for the fused weighted-aggregation (FedAvg) kernel: pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (K, N) — K client parameter blocks; weights: (K,).
+    Returns the weighted mean (N,), computed in f32, cast back."""
+    w = weights.astype(jnp.float32)
+    acc = jnp.einsum("kn,k->n", stacked.astype(jnp.float32), w)
+    return (acc / jnp.sum(w)).astype(stacked.dtype)
+
+
+def fedavg_tree_ref(stacked, weights, groups):
+    """Hierarchical reference: per-group weighted sums, then combine —
+    mathematically identical to fedavg_ref (associativity)."""
+    w = weights.astype(jnp.float32)
+    x = stacked.astype(jnp.float32)
+    partials = []
+    pw = []
+    for g in groups:
+        idx = jnp.asarray(g)
+        partials.append(jnp.einsum("kn,k->n", x[idx], w[idx]))
+        pw.append(jnp.sum(w[idx]))
+    acc = jnp.sum(jnp.stack(partials), axis=0)
+    return (acc / jnp.sum(jnp.stack(pw))).astype(stacked.dtype)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: flash attention forward (online softmax).
+
+Grid: (B*K*G, nq) — one program per (batch, kv-head, group) x q-block.
+The q block (Cq, hd) stays in VMEM; the kv stream is walked in Ck blocks
+with running (m, l, acc) in f32.  Block sizes default to MXU-friendly
+(Cq=512, Ck=512, hd multiples of 128 padded by the wrapper).  The causal /
+sliding-window mask is position-derived (iota), no mask tensor in HBM.
+
+The backward pass on TPU reuses the XLA-native custom_vjp from
+models/attention.py (itself chunked + recomputing); fusing the backward
+into Pallas is a further §Perf iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool,
+                  window, ck: int, sk: int):
+    Cq, hd = q_ref.shape[1], q_ref.shape[2]
+    nq_idx = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (Cq, hd)
+    scale = 1.0 / (hd ** 0.5)
+    q_pos = nq_idx * Cq + jnp.arange(Cq)
+
+    n_kb = sk // ck
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = k_ref[0, pl.ds(j * ck, ck), :].astype(jnp.float32)   # (Ck, hd)
+        vb = v_ref[0, pl.ds(j * ck, ck), :].astype(jnp.float32)
+        s = (q @ kb.T) * scale                                    # (Cq, Ck)
+        kv_pos = j * ck + jnp.arange(ck)
+        ok = jnp.ones((Cq, ck), bool)
+        if causal:
+            ok &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            ok &= q_pos[:, None] - kv_pos[None, :] < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((Cq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Cq,), jnp.float32)
+    a0 = jnp.zeros((Cq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_fwd_pallas(q, k, v, causal=True, window=None, block_q=512,
+                     block_k=512, interpret=False):
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — kv heads pre-broadcast to q
+    heads by the wrapper.  Returns o (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    Cq, Ck = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % Cq == 0 and Sk % Ck == 0, (Sq, Cq, Sk, Ck)
+    kern = functools.partial(_flash_kernel, causal=causal, window=window,
+                             ck=Ck, sk=Sk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, Sq // Cq),
+        in_specs=[
+            pl.BlockSpec((1, Cq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, Sk, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Cq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""jit'd wrapper for the flash-attention forward kernel: GQA broadcast,
+(B,S,H,hd) <-> (BH,S,hd) plumbing, platform dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_fwd_pallas
+from repro.models.attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "force"))
+def flash(q, k, v, causal: bool = True, window=None, force: str = "auto"):
+    """q: (B,S,H,hd); k/v: (B,S,K,hd).  Forward only."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    use = force
+    if use == "auto":
+        use = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use == "ref":
+        return flash_attention(q, k, v, causal, window)
+    kq = jnp.repeat(k, G, axis=2)       # broadcast kv heads to q heads
+    vq = jnp.repeat(v, G, axis=2)
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
+    o = flash_fwd_pallas(bh(q), bh(kq), bh(vq), causal=causal, window=window,
+                         interpret=jax.default_backend() != "tpu")
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

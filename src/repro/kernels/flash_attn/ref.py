@@ -1,0 +1,13 @@
+"""Oracle for the flash-attention kernel: exact quadratic attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+
+
+def attention_ref(q, k, v, causal=True, window=None):
+    q_pos = jnp.arange(q.shape[1])
+    kv_pos = jnp.arange(k.shape[1])
+    return full_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                          window=window)

@@ -1,0 +1,53 @@
+"""jit'd wrapper for quant8: padding, platform dispatch, flat API."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8.quant8 import QBLOCK, ROWS, dequantize_pallas, \
+    quantize_pallas
+from repro.kernels.quant8.ref import dequantize_ref, quantize_ref
+
+
+def _to_rows(x_flat):
+    n = x_flat.shape[0]
+    pad = (-n) % (QBLOCK * ROWS)
+    if pad:
+        x_flat = jnp.pad(x_flat, (0, pad))
+    return x_flat.reshape(-1, QBLOCK), n
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def _quantize_jit(x: jax.Array, force: str):
+    flat = x.reshape(-1)
+    use = force
+    if use == "auto":
+        use = "pallas" if jax.default_backend() == "tpu" else "ref"
+    rows, _ = _to_rows(flat)
+    if use == "ref":
+        q, s = quantize_ref(rows.reshape(-1), QBLOCK)
+        return q.reshape(-1, QBLOCK), s
+    return quantize_pallas(rows, interpret=jax.default_backend() != "tpu")
+
+
+def quantize(x: jax.Array, force: str = "auto"):
+    """x: any shape -> (q int8 (R,QBLOCK), scales f32 (R,), n = x.size).
+    n is a static int usable with ``dequantize``."""
+    q, s = _quantize_jit(x, force)
+    return q, s, int(x.size)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "force"))
+def dequantize(q: jax.Array, scale: jax.Array, n: int, force: str = "auto"):
+    use = force
+    if use == "auto":
+        use = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use == "ref":
+        out = dequantize_ref(q.reshape(-1), scale, QBLOCK)
+    else:
+        out = dequantize_pallas(q, scale,
+                                interpret=jax.default_backend() != "tpu")
+        out = out.reshape(-1)
+    return out[:n]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernels: symmetric per-block int8 quantize / dequantize.
+
+The DCN-hop compression used by the ``compressed`` aggregation schedule
+(MQTTFC zlib-compression analogue).  Tiles of (ROWS, BLOCK) live in VMEM;
+each row yields one f32 scale.  Quantize reads bf16/f32 and writes int8 +
+scales in a single pass (the XLA path materializes an f32 upcast of the
+full tensor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256          # elements per scale
+ROWS = 256            # scale rows per grid step: tile = ROWS*QBLOCK*4B = 256KB
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (ROWS, QBLOCK)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)        # (ROWS,)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = q * s_ref[...][:, None]
+
+
+def quantize_pallas(x: jax.Array, interpret: bool = False):
+    """x: (R, QBLOCK) with R % ROWS == 0."""
+    R, B = x.shape
+    assert B == QBLOCK and R % ROWS == 0, (R, B)
+    grid = (R // ROWS,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((R, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_pallas(q: jax.Array, scale: jax.Array, interpret: bool = False):
+    R, B = q.shape
+    assert B == QBLOCK and R % ROWS == 0
+    grid = (R // ROWS,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, QBLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,19 @@
+"""Oracle for the int8 block-quantization kernel (pure jnp)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, block: int = 256):
+    """x: (N,) with N % block == 0 -> (q int8 (N,), scales f32 (N/block,)).
+    Symmetric per-block quantization."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, block: int = 256):
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1)

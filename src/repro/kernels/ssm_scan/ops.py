@@ -1,0 +1,19 @@
+"""SSD-form selective-SSM scan op: thin wrapper over the WKV6 Pallas kernel
+with use_u=False (inclusive decay) — Hymba's SSM branch and RWKV6's WKV are
+the same chunked decayed-linear-attention computation (DESIGN.md §6)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.ops import wkv
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force"))
+def ssm_scan(C, Bk, x, w_log, s0=None, chunk: int = 64,
+             force: str = "auto"):
+    """C/Bk: (B,T,H,N); x: (B,T,H,hd); w_log: (B,T,H,1).
+    Returns (y (B,T,H,hd), h_final (B,H,N,hd))."""
+    return wkv(C, Bk, x, w_log, u=None, s0=s0, chunk=chunk, force=force)

@@ -1,0 +1,44 @@
+"""jit'd wrapper for the WKV6 kernel: (B,T,H,d) <-> (BH,T,d) plumbing +
+platform dispatch (pallas on TPU / interpret validation / jnp chunked)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import DEFAULT_CHUNK, wkv_pallas
+from repro.models.linear_attn import chunked as chunked_jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force"))
+def wkv(r, k, v, w_log, u=None, s0=None, chunk: int = DEFAULT_CHUNK,
+        force: str = "auto"):
+    """r,k: (B,T,H,dk); v: (B,T,H,dv); w_log broadcastable to r;
+    u: (H,dk) or None (SSD convention).  Returns (o (B,T,H,dv), s_final)."""
+    B, T, H, dk = r.shape
+    dv = v.shape[3]
+    use = force
+    if use == "auto":
+        use = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use == "ref":
+        return chunked_jnp(r, k, v, w_log, u=u, s0=s0, chunk=chunk)
+
+    w_full = jnp.broadcast_to(w_log, r.shape)
+    def bh(x, d):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    rb, kb, wb = bh(r, dk), bh(k, dk), bh(w_full, dk)
+    vb = bh(v, dv)
+    if u is None:
+        ub = jnp.zeros((B * H, dk), jnp.float32)
+    else:
+        ub = jnp.broadcast_to(u[None], (B, H, dk)).reshape(B * H, dk)
+    if s0 is None:
+        s0b = jnp.zeros((B * H, dk, dv), jnp.float32)
+    else:
+        s0b = s0.reshape(B * H, dk, dv)
+    o, sf = wkv_pallas(rb, kb, vb, wb, ub, s0b, chunk=chunk,
+                       use_u=u is not None,
+                       interpret=jax.default_backend() != "tpu")
+    o = o.reshape(B, H, T, dv).transpose(0, 2, 1, 3)
+    return o, sf.reshape(B, H, dk, dv)

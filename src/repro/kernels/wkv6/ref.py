@@ -1,0 +1,19 @@
+"""Oracle for the WKV6 / SSD chunked linear-attention kernel: the exact
+recurrent form from repro.models.linear_attn (time-step scan)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.linear_attn import chunked as chunked_jnp
+from repro.models.linear_attn import recurrent
+
+
+def wkv_ref(r, k, v, w_log, u=None, s0=None):
+    """r,k: (B,T,H,dk); v: (B,T,H,dv); w_log broadcastable; u: (H,dk)|None.
+    Returns (o, s_final) from the exact step-by-step recurrence."""
+    return recurrent(r, k, v, w_log, u=u, s0=s0)
+
+
+def wkv_chunked_jnp(r, k, v, w_log, u=None, s0=None, chunk=16):
+    """The jnp chunked form (itself validated against ``recurrent``)."""
+    return chunked_jnp(r, k, v, w_log, u=u, s0=s0, chunk=chunk)

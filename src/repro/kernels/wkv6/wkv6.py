@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked decayed linear attention (RWKV6 WKV / SSD).
+
+One grid program per (batch x head): the (T, d) streams live in VMEM
+(T=4096, d=64 -> 1 MiB per operand), the recurrent state (dk, dv) stays in
+an f32 VMEM scratch across the chunk loop, and each chunk does O(C^2 d)
+MXU work with the numerically-safe pairwise-decay-difference formulation
+(all exponents <= 0; see models/linear_attn.py for the math).
+
+Two static variants:
+  * use_u=True  — RWKV6: bonus-u convention, exclusive decay;
+  * use_u=False — SSD   : inclusive decay (Hymba's SSM branch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+                *, chunk: int, use_u: bool):
+    T, dk = r_ref.shape[1], r_ref.shape[2]
+    dv = v_ref.shape[2]
+    C = chunk
+    n = T // C
+    lower = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+    eye = jnp.eye(C, dtype=jnp.float32)
+
+    def body(c, S):
+        sl = pl.ds(c * C, C)
+        rc = r_ref[0, sl, :].astype(jnp.float32)          # (C, dk)
+        kc = k_ref[0, sl, :].astype(jnp.float32)
+        vc = v_ref[0, sl, :].astype(jnp.float32)          # (C, dv)
+        wc = w_ref[0, sl, :].astype(jnp.float32)          # (C, dk) log-decay
+        cum = jnp.cumsum(wc, axis=0)
+        base = (cum - wc) if use_u else cum
+        # inter-chunk: state contribution
+        q_eff = rc * jnp.exp(base)
+        o_inter = q_eff @ S                               # (C, dv)
+        # intra-chunk pairwise decay differences (<= 0 for s < t)
+        diff = base[:, None, :] - cum[None, :, :]         # (C, C, dk)
+        decay = jnp.where(lower[:, :, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("td,sd,tsd->ts", rc, kc, decay)
+        if use_u:
+            diag = jnp.sum(rc * u_ref[0].astype(jnp.float32) * kc, axis=1)
+        else:
+            diag = jnp.sum(rc * kc, axis=1)
+        A = A + diag[:, None] * eye
+        o = o_inter + A @ vc
+        o_ref[0, sl, :] = o.astype(o_ref.dtype)
+        # state update
+        cum_last = cum[-1]                                # (dk,)
+        k_eff = kc * jnp.exp(cum_last[None, :] - cum)
+        S_new = S * jnp.exp(cum_last)[:, None] + k_eff.T @ vc
+        return S_new
+
+    S = jax.lax.fori_loop(0, n, body, s0_ref[0].astype(jnp.float32))
+    sf_ref[0] = S
+
+
+def wkv_pallas(r, k, v, w_log, u, s0, chunk: int = DEFAULT_CHUNK,
+               use_u: bool = True, interpret: bool = False):
+    """r,k,w_log: (BH, T, dk); v: (BH, T, dv); u: (BH, dk); s0: (BH, dk, dv).
+    Returns (o (BH,T,dv) in v.dtype, s_final (BH,dk,dv) f32)."""
+    BH, T, dk = r.shape
+    dv = v.shape[2]
+    assert T % chunk == 0, (T, chunk)
+    kern = functools.partial(_wkv_kernel, chunk=chunk, use_u=use_u)
+    return pl.pallas_call(
+        kern,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, T, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dk), lambda i: (i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w_log, u, s0)

@@ -1,0 +1,289 @@
+"""Loop-aware static analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, but our models
+are scan-over-layers (and flash attention / linear attention scan over
+chunks), so raw numbers under-count by ~n_layers x n_chunks.  This analyzer
+parses the post-SPMD HLO, recovers each while loop's trip count
+(``backend_config known_trip_count``, falling back to the loop condition's
+comparison constant), and scales:
+
+  * FLOPs        — from dot ops: 2 x prod(result_dims) x prod(contract_dims)
+                   (operand shapes resolved through a module-wide symbol
+                   table — optimized HLO does not inline operand shapes),
+  * HBM bytes    — operand+result bytes at materialization boundaries
+                   (fusion outputs, dots, copies, collectives, slices, ...),
+  * collective wire bytes — per op kind with ring scaling 2(g-1)/g for
+                   all-reduce, (g-1)/g for all-gather/reduce-scatter, and
+                   cross-pod detection from replica-group span.
+
+All numbers are per-device (the partitioned module is the per-device
+program).  cost_analysis raw values are reported alongside for reference.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# first lowercase-word-followed-by-paren after the type is the opcode
+# (dtypes are followed by '[', tuple types by more shapes, comments by '=')
+_OPCODE_CALL_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes treated as materialization boundaries for HBM-byte accounting.
+# A TPU compilation fuses elementwise chains into their consumers, so a
+# stray top-level `add`/`convert` in the CPU-lowered module is NOT priced
+# as HBM traffic; only genuinely materializing ops are.
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "transpose",
+    "reduce", "dynamic-update-slice", "dynamic-slice",
+    "gather", "scatter", "concatenate", "sort",
+    "select-and-scatter", "reduce-window",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES} \
+  | {c + "-done" for c in COLLECTIVES}
+
+
+def _shape_bytes_str(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpLine:
+    name: str
+    result: str
+    opcode: str
+    rest: str             # text after the opening paren of operands
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    is_fused: bool = False
+
+
+def _operands(rest: str) -> list[str]:
+    """Operand names: the %refs before the closing paren of the op call."""
+    return _OPERAND_RE.findall(rest.split(")")[0])
+
+
+def parse_module(hlo: str):
+    comps: dict[str, Computation] = {}
+    symtab: dict[str, str] = {}       # op name -> result shape string
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and _COMP_HDR.match(stripped):
+            cur = Computation(_COMP_HDR.match(stripped).group(1))
+            comps[cur.name] = cur
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        om = _OPCODE_CALL_RE.search(body)
+        if not om:
+            continue
+        result = body[:om.start()]
+        opcode = om.group(1)
+        rest = body[om.end():]
+        op = OpLine(name, result, opcode.lower(), rest)
+        symtab[name] = result
+        if cur is not None:
+            cur.ops.append(op)
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                fm = _CALLS_RE.search(op.rest)
+                if fm and fm.group(1) in comps:
+                    comps[fm.group(1)].is_fused = True
+    return comps, symtab
+
+
+def _trip_count(op: OpLine, comps, symtab) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return max(int(m.group(1)), 1)
+    wm = _WHILE_RE.search(op.rest)
+    if wm and wm.group(1) in comps:
+        best = 1
+        for cop in comps[wm.group(1)].ops:
+            for cm in _CONST_RE.finditer(cop.rest):
+                best = max(best, int(cm.group(1)))
+        return best
+    return 1
+
+
+def _dot_flops(op: OpLine, symtab) -> float:
+    out = 1
+    for d in _dims_of(op.result):
+        out *= d
+    ops = _operands(op.rest)
+    if not ops:
+        return 0.0
+    lhs_dims = _dims_of(symtab.get(ops[0], ""))
+    cm = _LHS_C_RE.search(op.rest)
+    contract = 1
+    if cm:
+        for idx in [int(i) for i in cm.group(1).split(",") if i]:
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out * contract
+
+
+def _group_size(rest: str, default: int):
+    m = _GROUPS_PAIR_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        return max(len(first.split(",")), 1) if first else 1
+    return default
+
+
+def _operand_bytes(op: OpLine, symtab) -> int:
+    return sum(_shape_bytes_str(symtab.get(o, "")) for o in _operands(op.rest))
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_cross_pod_bytes: float = 0.0
+    coll_per_op: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    while_trips: list = field(default_factory=list)
+    hbm_per_op: dict = field(default_factory=dict)
+
+    def merge_scaled(self, other: "HLOCost", k: float):
+        self.flops += other.flops * k
+        self.hbm_bytes += other.hbm_bytes * k
+        self.coll_bytes += other.coll_bytes * k
+        self.coll_cross_pod_bytes += other.coll_cross_pod_bytes * k
+        for key, v in other.coll_per_op.items():
+            self.coll_per_op[key] = self.coll_per_op.get(key, 0.0) + v * k
+        for key, v in other.coll_counts.items():
+            self.coll_counts[key] = self.coll_counts.get(key, 0) + v * k
+        for key, v in other.hbm_per_op.items():
+            self.hbm_per_op[key] = self.hbm_per_op.get(key, 0.0) + v * k
+        self.while_trips.extend(other.while_trips)
+
+
+def analyze(hlo: str, n_devices: int, pod_size: int = 256) -> HLOCost:
+    comps, symtab = parse_module(hlo)
+    memo: dict[str, HLOCost] = {}
+
+    def comp_cost(name: str, stack=()) -> HLOCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HLOCost()
+        c = comps[name]
+        total = HLOCost()
+        for op in c.ops:
+            kind = op.opcode.replace("-start", "").replace("-done", "")
+            if op.opcode == "while":
+                wm = _WHILE_RE.search(op.rest)
+                if wm:
+                    trips = _trip_count(op, comps, symtab)
+                    inner = HLOCost()
+                    inner.merge_scaled(comp_cost(wm.group(2), stack + (name,)), 1)
+                    t = HLOCost()
+                    t.merge_scaled(inner, trips)
+                    t.while_trips = [trips] + inner.while_trips
+                    total.merge_scaled(t, 1)
+                continue
+            if op.opcode in ("call", "map", "custom-call"):
+                cm = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+                if cm:
+                    total.merge_scaled(comp_cost(cm.group(1), stack + (name,)), 1)
+                continue
+            if op.opcode == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    for b in bm.group(1).replace("%", "").split(","):
+                        total.merge_scaled(
+                            comp_cost(b.strip(), stack + (name,)), 1)
+                continue
+            if op.opcode == "fusion":
+                fm = _CALLS_RE.search(op.rest)
+                if fm:
+                    inner = comp_cost(fm.group(1), stack + (name,))
+                    total.flops += inner.flops   # dots inside fusions are real
+                fb = _shape_bytes_str(op.result) + _operand_bytes(op, symtab)
+                total.hbm_bytes += fb
+                total.hbm_per_op["fusion"] = total.hbm_per_op.get("fusion", 0.0) + fb
+                continue
+            if kind in COLLECTIVES and "done" not in op.opcode:
+                size = _shape_bytes_str(op.result)
+                if kind in ("all-gather", "reduce-scatter"):
+                    size = max(size, _operand_bytes(op, symtab))
+                g = _group_size(op.rest, n_devices)
+                if kind == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * size
+                elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                    wire = (g - 1) / g * size
+                else:
+                    wire = float(size)
+                total.coll_bytes += wire
+                total.coll_per_op[kind] = total.coll_per_op.get(kind, 0.0) + wire
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                if g > pod_size:
+                    total.coll_cross_pod_bytes += wire
+                total.hbm_bytes += _shape_bytes_str(op.result)
+                continue
+            if op.opcode == "dot":
+                total.flops += _dot_flops(op, symtab)
+            if op.opcode in _MEM_OPS and not c.is_fused:
+                b = (_shape_bytes_str(op.result)
+                     + _operand_bytes(op, symtab))
+                total.hbm_bytes += b
+                total.hbm_per_op[op.opcode] = total.hbm_per_op.get(op.opcode, 0.0) + b
+        memo[name] = total
+        return total
+
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    entry_name = m.group(1) if m else next(iter(comps))
+    return comp_cost(entry_name)

@@ -1,0 +1,104 @@
+"""Input construction: ShapeDtypeStruct stand-ins (dry-run) or real arrays
+(smoke tests) for every (arch x shape) cell, plus their PartitionSpecs.
+
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, internvl2 gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model_api import cache_len_for
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig, clients: int = 0):
+    """Abstract batch pytree.  clients>0 prepends an FL-clients dim
+    (training only)."""
+    gb, S = shape.global_batch, shape.seq_len
+
+    def shp(*dims):
+        if clients:
+            assert dims[0] % clients == 0, (dims, clients)
+            return (clients, dims[0] // clients) + tuple(dims[1:])
+        return tuple(dims)
+
+    if shape.kind == "train":
+        b = {
+            "tokens": jax.ShapeDtypeStruct(shp(gb, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(shp(gb, S), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        b = {"tokens": jax.ShapeDtypeStruct((gb, S), jnp.int32)}
+    else:  # decode
+        b = {
+            "token": jax.ShapeDtypeStruct((gb, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((gb,), jnp.int32),
+        }
+    if shape.kind in ("train", "prefill"):
+        fe = cfg.frontend
+        if cfg.family == "encdec":
+            b["frames"] = jax.ShapeDtypeStruct(
+                shp(gb, fe.n_tokens, fe.feat_dim), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            b["patches"] = jax.ShapeDtypeStruct(
+                shp(gb, fe.n_tokens, fe.feat_dim), jnp.bfloat16)
+    return b
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, clients: int = 0,
+                client_axis: Optional[str] = None, data_axis: str = "data",
+                seq_axis: Optional[str] = "model",
+                axis_sizes: Optional[dict] = None):
+    """PartitionSpecs matching batch_struct.  The sequence dim shards over
+    the ``model`` axis (sequence parallelism): activations stay bounded even
+    for 32k prefill, and attention q stays seq-sharded through the chunked
+    online-softmax scan.  Dims that don't divide their mesh axis replicate
+    (e.g. global_batch=1 for long_500k)."""
+    sizes = axis_sizes or {"data": 16, "model": 16, "pod": 2}
+
+    def ok(dim, ax):
+        return ax is not None and dim % sizes.get(ax, 1) == 0
+
+    def sp(shp, has_seq):
+        parts = []
+        i = 0
+        if clients:
+            parts.append(client_axis if ok(shp[0], client_axis) else None)
+            i = 1
+            ax = data_axis if client_axis != data_axis else None
+            parts.append(ax if len(shp) > 1 and ok(shp[1], ax) else None)
+        else:
+            parts.append(data_axis if ok(shp[0], data_axis) else None)
+        if has_seq and len(shp) > len(parts):
+            sax = seq_axis if ok(shp[len(parts)], seq_axis) else None
+            parts.append(sax)
+        parts += [None] * (len(shp) - len(parts))
+        return P(*parts[:len(shp)])
+
+    b = batch_struct(cfg, shape, clients)
+    out = {}
+    for k, v in b.items():
+        has_seq = k in ("tokens", "labels") and shape.kind != "decode"
+        out[k] = sp(v.shape, has_seq)
+    return out
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key, clients: int = 0):
+    """Concrete random batch (smoke tests / examples)."""
+    structs = batch_struct(cfg, shape, clients)
+    out = {}
+    for name, st in structs.items():
+        key, sub = jax.random.split(key)
+        if st.dtype == jnp.int32 and name in ("tokens", "labels", "token"):
+            out[name] = jax.random.randint(sub, st.shape, 0, cfg.vocab, jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.full(st.shape, shape.seq_len - 1, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, st.shape, jnp.float32).astype(st.dtype)
+    return out

@@ -1,0 +1,72 @@
+"""KV caches (full-length and sliding-window ring buffers) + recurrent
+state declarations.  Cache layout: stacked over layers for scan.
+
+Decode caches shard the *sequence* dim over the ``model`` mesh axis
+("cache_seq" rule) and batch over ``data`` — a 32k-decode cache for
+Kimi-K2 would be ~57 GB/chip replicated, but is ~3.6 GB/chip seq-sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import decl
+
+
+def kv_cache_decl(n_layers: int, batch: int, cache_len: int, n_kv: int,
+                  head_dim: int, dtype=jnp.bfloat16, prefix: str = ""):
+    return {
+        prefix + "k": decl((n_layers, batch, cache_len, n_kv, head_dim),
+                           ("layers", "batch", "cache_seq", "kv_heads", None),
+                           init="zeros", dtype=dtype),
+        prefix + "v": decl((n_layers, batch, cache_len, n_kv, head_dim),
+                           ("layers", "batch", "cache_seq", "kv_heads", None),
+                           init="zeros", dtype=dtype),
+        prefix + "kv_pos": decl((batch, cache_len), ("batch", "cache_seq"),
+                                init="neg_ones", dtype=jnp.int32),
+    }
+
+
+def cache_slot(pos: jax.Array, cache_len: int) -> jax.Array:
+    """Ring-buffer slot for absolute position ``pos`` (scalar or (B,))."""
+    return jnp.asarray(pos) % cache_len
+
+
+def update_kv_layer(k_l, v_l, new_k, new_v, slot):
+    """Insert one token into a layer's cache.  k_l: (B,S,K,hd);
+    new_k: (B,1,K,hd); slot: (B,)."""
+    b = jnp.arange(k_l.shape[0])
+    k_l = k_l.at[b, slot].set(new_k[:, 0])
+    v_l = v_l.at[b, slot].set(new_v[:, 0])
+    return k_l, v_l
+
+
+def update_kv_pos(kv_pos, pos, cache_len):
+    """kv_pos: (B,S); pos: (B,) absolute position being written."""
+    b = jnp.arange(kv_pos.shape[0])
+    return kv_pos.at[b, cache_slot(pos, cache_len)].set(pos)
+
+
+def prefilled_pos(batch: int, seq: int):
+    """kv_pos array describing a fully prefilled cache of length seq."""
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+def pad_cache(cache: dict, max_len: int) -> dict:
+    """Grow a prefilled cache's sequence capacity to ``max_len`` (empty
+    slots marked kv_pos=-1).  Required before decoding past the prompt
+    length on full-attention models; windowed caches wrap instead."""
+    out = dict(cache)
+    if "k" not in cache:
+        return out                      # recurrent state (rwkv): nothing to do
+    cur = cache["k"].shape[2]
+    extra = max_len - cur
+    if extra <= 0:
+        return out
+    for key in ("k", "v"):
+        pad = [(0, 0)] * cache[key].ndim
+        pad[2] = (0, extra)
+        out[key] = jnp.pad(cache[key], pad)
+    out["kv_pos"] = jnp.pad(cache["kv_pos"], ((0, 0), (0, extra)),
+                            constant_values=-1)
+    return out

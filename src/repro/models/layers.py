@@ -1,0 +1,114 @@
+"""Shared neural-net building blocks (pure JAX, decl-based params)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import decl
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_decl(d_model: int):
+    return {"scale": decl((d_model,), (None,), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_decl(d_model: int):
+    return {"scale": decl((d_model,), (None,), init="ones", dtype=jnp.float32),
+            "bias": decl((d_model,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    ang = ang[..., None, :]                                         # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu_decl(d_model: int, d_ff: int):
+    return {
+        "w_gate": decl((d_model, d_ff), ("embed", "mlp")),
+        "w_up": decl((d_model, d_ff), ("embed", "mlp")),
+        "w_down": decl((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_decl(d_model: int, d_ff: int):
+    return {
+        "w_in": decl((d_model, d_ff), ("embed", "mlp")),
+        "b_in": decl((d_ff,), ("mlp",), init="zeros", dtype=jnp.float32),
+        "w_out": decl((d_ff, d_model), ("mlp", "embed")),
+        "b_out": decl((d_model,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embeddings / logits
+# --------------------------------------------------------------------------
+
+def pad_vocab(vocab: int, multiple: int = 128) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_decl(vocab: int, d_model: int):
+    return {
+        "in_table": decl((pad_vocab(vocab), d_model), ("vocab", "embed_tp"), init="embed"),
+        "out_table": decl((pad_vocab(vocab), d_model), ("vocab", "embed"), init="embed"),
+    }
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["in_table"], tokens, axis=0)
+
+
+def logits_out(params, x):
+    # vocab-parallel projection; CE is computed without gathering full vocab.
+    return jnp.einsum("...d,vd->...v", x, params["out_table"])

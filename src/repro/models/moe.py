@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Token-choice top-k routing; tokens are sorted by expert, written into fixed
+(E, capacity, D) buffers (overflow dropped — standard capacity dropping) and
+the expert FFNs run as dense batched einsums.  Expert weight sharding decides
+the parallelism flavour automatically via the logical-axis resolver:
+
+  * Kimi-K2 : 384 experts % 16 == 0  -> experts sharded over ``model`` (EP);
+  * Mixtral : 8 experts  % 16 != 0  -> falls through to ``expert_mlp``
+    (d_ff sharded over ``model``: intra-expert TP), experts replicated.
+
+A shard_map all-to-all EP variant (``impl="ep_a2a"``) lives in
+``repro/dist/moe_a2a.py`` and is used as a perf hillclimb for Kimi.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import decl
+from repro.models.layers import swiglu, swiglu_decl
+
+
+def moe_decl(cfg: ArchConfig):
+    m = cfg.moe
+    d = {
+        "router": decl((cfg.d_model, m.n_experts), ("embed", "experts"),
+                       dtype=jnp.float32, scale=0.5),
+        "w_gate": decl((m.n_experts, cfg.d_model, m.d_ff_expert),
+                       ("experts", "embed", "expert_mlp")),
+        "w_up": decl((m.n_experts, cfg.d_model, m.d_ff_expert),
+                     ("experts", "embed", "expert_mlp")),
+        "w_down": decl((m.n_experts, m.d_ff_expert, cfg.d_model),
+                       ("experts", "expert_mlp", "embed")),
+    }
+    if m.n_shared_experts:
+        d["shared"] = swiglu_decl(cfg.d_model, m.n_shared_experts * m.d_ff_expert)
+    return d
+
+
+def capacity(n_tokens: int, m) -> int:
+    cap = int(m.capacity_factor * m.top_k * n_tokens / m.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def route(router_w, x_flat, top_k: int):
+    """x_flat: (T, D) -> (weights (T,k), ids (T,k), gates (T,E))."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    return topw, topi, gates
+
+
+def moe_apply(cfg: ArchConfig, p, x):
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar)."""
+    m = cfg.moe
+    if m.impl == "ep_a2a":
+        from repro.dist.moe_a2a import moe_apply_a2a
+        return moe_apply_a2a(cfg, p, x)
+    if m.impl == "tp_local":
+        from repro.dist.moe_a2a import moe_apply_tp_local
+        return moe_apply_tp_local(cfg, p, x)
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    xf = x.reshape(T, D)
+
+    topw, topi, gates = route(p["router"], xf, K)
+
+    cap = capacity(T, m)
+    N = T * K
+    ids = topi.reshape(N)
+    wts = topw.reshape(N)
+    tok = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(ids)                       # stable
+    sid, stok, sw = ids[order], tok[order], wts[order]
+    first = jnp.searchsorted(sid, sid, side="left")
+    rank = jnp.arange(N) - first                   # position within expert
+    valid = rank < cap
+    slot = jnp.where(valid, sid * cap + rank, E * cap)
+
+    buf = jnp.zeros((E * cap, D), x.dtype).at[slot].set(xf[stok], mode="drop")
+    h = buf.reshape(E, cap, D)
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("ecf,efd->ecd", act, p["w_down"]).reshape(E * cap, D)
+
+    gathered = out[jnp.clip(slot, 0, E * cap - 1)]
+    gathered = jnp.where(valid[:, None], gathered, 0)
+    y = jnp.zeros((T, D), x.dtype).at[stok].add(
+        gathered * sw[:, None].astype(x.dtype))
+
+    # Switch-style load-balancing auxiliary loss.
+    f = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), ids,
+                            num_segments=E) / N
+    pmean = jnp.mean(gates, axis=0)
+    aux = m.aux_coef * E * jnp.sum(f * pmean)
+
+    if m.n_shared_experts:
+        y = y + swiglu(p["shared"], xf)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,162 @@
+"""Pure-JAX optimizers (no optax dependency): SGD+momentum, AdamW,
+Adafactor (factored second moments — the only optimizer whose state fits a
+v5e pod for the 1T-param Kimi config).  Schedules: warmup+cosine.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    name: str
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant(lr_val: float):
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# SGD + momentum
+# --------------------------------------------------------------------------
+
+def sgdm(lr=constant(1e-2), momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": _tmap(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        mu = _tmap(lambda m, g: momentum * m + g.astype(m.dtype),
+                   state["mu"], grads)
+        updates = _tmap(lambda m: (-lr(step) * m).astype(m.dtype), mu)
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update, "sgdm")
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(lr=constant(3e-4), b1=0.9, b2=0.95, eps=1e-8, wd=0.01,
+          moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step_v = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            return (-lr(step) * step_v).astype(p.dtype), \
+                m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        out = _tmap(upd, grads, state["m"], state["v"], params)
+        updates = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = _tmap(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# --------------------------------------------------------------------------
+
+def adafactor(lr=constant(1e-3), decay=0.8, eps=1e-30,
+              clip_threshold=1.0) -> Optimizer:
+    """Factored for >=2D params (state = row+col means, O(n+m) not O(nm));
+    full second moment for 1D."""
+
+    def init(params):
+        def f(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": _tmap(f, params)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                prec = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(prec, eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            # update clipping (rms)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr(step) * u).astype(p.dtype), ns
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        s_leaves = treedef.flatten_up_to(state["f"])
+        p_leaves = treedef.flatten_up_to(params)
+        results = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        updates = treedef.unflatten([r[0] for r in results])
+        ns = treedef.unflatten([r[1] for r in results])
+        return updates, {"f": ns}
+
+    return Optimizer(init, update, "adafactor")
+
+
+# --------------------------------------------------------------------------
+
+def make_optimizer(cfg: ArchConfig, lr: Optional[float] = None,
+                   total_steps: int = 10000) -> Optimizer:
+    sched = warmup_cosine(lr or 3e-4, warmup=min(100, total_steps // 10 + 1),
+                          total=total_steps)
+    if cfg.optimizer == "adafactor":
+        return adafactor(sched)
+    if cfg.optimizer == "sgdm":
+        return sgdm(sched)
+    return adamw(sched)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,110 @@
+"""Batched serving engine: continuous-batching style loop over a fixed
+batch of slots (prefill on admit, decode every step, evict on EOS/length).
+Used by examples/serve_lm.py and the serving smoke tests; the decode/prefill
+functions are the exact ones the dry-run lowers for the inference cells.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model_api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-batch decode engine with prompt prefill.
+
+    For simplicity every admitted batch prefills together (left-padded to
+    the longest prompt); decode then proceeds one token per step for all
+    live slots.  greedy sampling."""
+
+    def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.model = model_api.get_model(cfg)
+        self._decode = jax.jit(
+            lambda p, c, b: self.model.decode_step(cfg, p, c, b))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(cfg, p, b))
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "requests": 0, "decode_s": 0.0, "prefill_s": 0.0}
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        r = Request(self.stats["requests"], np.asarray(prompt, np.int32),
+                    max_new)
+        self.stats["requests"] += 1
+        self.queue.append(r)
+        return r
+
+    def _extra_inputs(self, B, S):
+        fe = self.cfg.frontend
+        out = {}
+        if self.cfg.family == "encdec":
+            out["frames"] = jnp.zeros((B, fe.n_tokens, fe.feat_dim),
+                                      jnp.bfloat16)
+        elif self.cfg.family == "vlm":
+            out["patches"] = jnp.zeros((B, min(fe.n_tokens, S), fe.feat_dim),
+                                       jnp.bfloat16)
+        return out
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        done = []
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.B, len(self.queue)))]
+            done.extend(self._run_batch(batch))
+        return done
+
+    def _run_batch(self, reqs: list[Request]) -> list[Request]:
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        batch.update(self._extra_inputs(B, S))
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        if self.cfg.window is None and self.cfg.family != "rwkv":
+            from repro.models.kvcache import pad_cache
+            max_new = max(r.max_new for r in reqs)
+            cache = pad_cache(cache, min(S + max_new + 1, self.max_seq))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += B * S
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        max_new = max(r.max_new for r in reqs)
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if len(r.out) < r.max_new:
+                    r.out.append(int(cur[i]))
+            pos = jnp.full((B,), S + step, jnp.int32)
+            dbatch = {"token": cur[:, None], "pos": pos}
+            logits, cache = self._decode(self.params, cache, dbatch)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.stats["decode_steps"] += 1
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for r in reqs:
+            r.done = True
+        return reqs

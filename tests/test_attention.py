@@ -1,0 +1,96 @@
+"""Flash attention (XLA custom_vjp form) vs exact quadratic oracle:
+shape/dtype sweeps, SWA, GQA, gradients, decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    full_attention)
+
+CASES = [
+    # B, S, H, K, hd, causal, window, dtype
+    (2, 128, 4, 2, 16, True, None, jnp.float32),
+    (1, 200, 6, 6, 32, True, 64, jnp.float32),
+    (2, 96, 4, 1, 8, False, None, jnp.float32),
+    (1, 256, 8, 4, 16, True, 32, jnp.bfloat16),
+    (3, 64, 2, 2, 24, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,K,hd,causal,window,dtype", CASES)
+def test_flash_matches_full(B, S, H, K, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32).astype(dtype)
+    pos = jnp.arange(S)
+    o1 = flash_attention(q, k, v, causal, window, 32, 48)
+    o2 = full_attention(q, k, v, pos, pos, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_gradients_match_full():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, H, K, hd = 2, 160, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    pos = jnp.arange(S)
+    t = jnp.sin(jnp.arange(B * S * H * hd).reshape(B, S, H, hd) * 0.01)
+
+    g1 = jax.grad(lambda q, k, v: jnp.sum(
+        flash_attention(q, k, v, True, 48, 32, 64) * t), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: jnp.sum(
+        full_attention(q, k, v, pos, pos, causal=True, window=48) * t),
+        (0, 1, 2))(q, k, v)
+    for a, b, n in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4,
+                                   err_msg=f"d{n}")
+
+
+def test_decode_matches_full_last_position():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, S, H, K, hd = 2, 33, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    pos = jnp.arange(S)
+    full = full_attention(q, k, v, pos, pos, causal=True)
+    kv_pos = jnp.broadcast_to(pos, (B, S))
+    dec = decode_attention(q[:, -1:], k, v, kv_pos,
+                           jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=1e-5, atol=1e-6)
+
+
+def test_decode_window_masks_old_positions():
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, S, H, K, hd, W = 1, 40, 2, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    o_w = decode_attention(q, k, v, kv_pos, pos, window=W)
+    # zeroing keys outside the window must not change the output
+    keep = (kv_pos[0] > (S - 1 - W))
+    k2 = jnp.where(keep[None, :, None, None], k, 100.0)
+    v2 = jnp.where(keep[None, :, None, None], v, -100.0)
+    o_w2 = decode_attention(q, k2, v2, kv_pos, pos, window=W)
+    np.testing.assert_allclose(o_w, o_w2, rtol=1e-5)
+
+
+def test_empty_slots_are_ignored():
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    B, S, H, K, hd = 1, 16, 2, 2, 8
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    kv_pos = jnp.where(jnp.arange(S) < 10, jnp.arange(S), -1)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+    pos = jnp.full((B,), 9, jnp.int32)
+    o = decode_attention(q, k, v, kv_pos, pos)
+    o_trunc = decode_attention(q, k[:, :10], v[:, :10], kv_pos[:, :10], pos)
+    np.testing.assert_allclose(o, o_trunc, rtol=1e-5)

@@ -1,0 +1,128 @@
+"""SimBroker unit tests: MQTT semantics SDFLMQ depends on."""
+import pytest
+
+from repro.core.broker import Message, SimBroker, topic_matches
+
+
+def _collector():
+    got = []
+    return got, lambda m: got.append((m.topic, m.payload))
+
+
+class TestTopicMatching:
+    @pytest.mark.parametrize("filt,topic,expected", [
+        ("a/b/c", "a/b/c", True),
+        ("a/b/c", "a/b", False),
+        ("a/+/c", "a/x/c", True),
+        ("a/+/c", "a/x/y", False),
+        ("a/#", "a/b/c/d", True),
+        ("a/#", "a", True),    # MQTT spec: the parent level matches '#'
+        ("#", "anything/at/all", True),
+        ("+/b", "a/b", True),
+        ("+/b", "a/b/c", False),
+        ("sdflmq/session/+/global", "sdflmq/session/s1/global", True),
+        ("sdflmq/session/+/global", "sdflmq/session/s1/cluster/x/agg", False),
+    ])
+    def test_matching(self, filt, topic, expected):
+        assert topic_matches(filt, topic) is expected
+
+
+class TestBroker:
+    def test_basic_pubsub(self):
+        b = SimBroker()
+        got, cb = _collector()
+        b.connect("c1", cb)
+        b.subscribe("c1", "t/x")
+        b.publish("t/x", b"hello")
+        b.publish("t/y", b"nope")
+        assert got == [("t/x", b"hello")]
+
+    def test_wildcard_delivery(self):
+        b = SimBroker()
+        got, cb = _collector()
+        b.connect("c1", cb)
+        b.subscribe("c1", "t/+/z")
+        b.publish("t/a/z", b"1")
+        b.publish("t/b/z", b"2")
+        assert len(got) == 2
+
+    def test_retained_message_on_late_subscribe(self):
+        b = SimBroker()
+        b.publish("cfg/topo", b"v1", retain=True)
+        got, cb = _collector()
+        b.connect("late", cb)
+        b.subscribe("late", "cfg/#")
+        assert got == [("cfg/topo", b"v1")]
+
+    def test_retained_overwrite_and_clear(self):
+        b = SimBroker()
+        b.publish("r", b"old", retain=True)
+        b.publish("r", b"new", retain=True)
+        got, cb = _collector()
+        b.connect("c", cb)
+        b.subscribe("c", "r")
+        assert got == [("r", b"new")]
+        b.publish("r", b"", retain=True)   # clear
+        got2, cb2 = _collector()
+        b.connect("c2", cb2)
+        b.subscribe("c2", "r")
+        assert got2 == []
+
+    def test_last_will_fires_on_abnormal_disconnect_only(self):
+        b = SimBroker()
+        got, cb = _collector()
+        b.connect("watcher", cb)
+        b.subscribe("watcher", "will/#")
+        b.connect("c1", lambda m: None, will=Message("will/c1", b"dead"))
+        b.disconnect("c1", graceful=True)
+        assert got == []
+        b.connect("c2", lambda m: None, will=Message("will/c2", b"dead"))
+        b.disconnect("c2", graceful=False)
+        assert got == [("will/c2", b"dead")]
+
+    def test_reentrant_publish_is_fifo(self):
+        b = SimBroker()
+        order = []
+
+        def on_a(m):
+            order.append("a")
+            b.publish("t/b", b"")
+
+        b.connect("c1", on_a)
+        b.subscribe("c1", "t/a")
+        b.connect("c2", lambda m: order.append("b"))
+        b.subscribe("c2", "t/b")
+        b.connect("c3", lambda m: order.append("a2"))
+        b.subscribe("c3", "t/a")
+        b.publish("t/a", b"")
+        assert order == ["a", "a2", "b"]   # queued, not recursive
+
+    def test_bridging_no_loops(self):
+        b1, b2 = SimBroker("b1"), SimBroker("b2")
+        b1.bridge(b2, ["shared/#"])
+        got1, cb1 = _collector()
+        got2, cb2 = _collector()
+        b1.connect("c1", cb1)
+        b1.subscribe("c1", "shared/x")
+        b2.connect("c2", cb2)
+        b2.subscribe("c2", "shared/x")
+        b1.publish("shared/x", b"from1")
+        b2.publish("shared/x", b"from2")
+        assert got1 == [("shared/x", b"from1"), ("shared/x", b"from2")]
+        assert got2 == [("shared/x", b"from1"), ("shared/x", b"from2")]
+        # regional topics do not cross
+        b1.publish("local/x", b"l")
+        assert ("local/x", b"l") not in got2
+
+    def test_sys_stats_counters(self):
+        b = SimBroker()
+        got, cb = _collector()
+        b.connect("c", cb)
+        b.subscribe("c", "t")
+        b.publish("t", b"12345")
+        b.publish("unrouted", b"x")
+        st = b.sys_stats()
+        assert st["messages_received"] == 2
+        assert st["messages_sent"] == 1
+        assert st["bytes_sent"] == 5
+        assert st["dropped_no_subscriber"] == 1

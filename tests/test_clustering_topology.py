@@ -1,0 +1,111 @@
+"""Clustering + topology-compiler tests, incl. hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import ClusterTree, build_tree, validate_tree
+from repro.core.topology import compile_tree, flat_schedule, validate_schedule
+
+
+def _clients(n):
+    return [f"c{i}" for i in range(n)]
+
+
+class TestBuildTree:
+    @pytest.mark.parametrize("n,ratio,levels", [
+        (2, 0.3, 3), (5, 0.3, 3), (8, 0.5, 3), (16, 0.3, 3), (16, 0.3, 2),
+        (40, 0.3, 3), (100, 0.2, 4), (3, 0.9, 2), (1, 0.5, 3),
+    ])
+    def test_invariants(self, n, ratio, levels):
+        cs = _clients(n)
+        tree = build_tree("s", cs, cs, ratio, levels)
+        assert validate_tree(tree, cs) == []
+
+    def test_assignments_cover_everyone(self):
+        cs = _clients(12)
+        tree = build_tree("s", cs, cs, 0.3, 3)
+        asg = tree.assignments()
+        assert set(asg) == set(cs)
+        # every client trains exactly one leaf cluster
+        for a in asg.values():
+            assert a.train_cluster is not None
+        # total expected inputs at level 0 == number of clients
+        total = sum(d.expected for a in asg.values() for d in a.duties
+                    if d.level == 0)
+        assert total == len(cs)
+        # exactly one root duty
+        roots = [d for a in asg.values() for d in a.duties if d.parent is None]
+        assert len(roots) == 1
+
+    def test_ranked_heads_get_duty(self):
+        cs = _clients(10)
+        ranked = ["c7", "c3"] + [c for c in cs if c not in ("c7", "c3")]
+        tree = build_tree("s", cs, ranked, 0.2, 3)
+        heads0 = {c.head for c in tree.levels[0]}
+        assert heads0 == {"c7", "c3"}
+
+    def test_describe_roundtrip(self):
+        cs = _clients(9)
+        tree = build_tree("s", cs, cs, 0.3, 3)
+        back = ClusterTree.from_describe(tree.describe())
+        assert validate_tree(back, cs) == []
+        assert back.describe() == tree.describe()
+
+    @settings(max_examples=60, deadline=None)
+    @given(n=st.integers(1, 60), ratio=st.floats(0.05, 0.95),
+           levels=st.integers(1, 5), seed=st.integers(0, 5))
+    def test_property_random_trees_valid(self, n, ratio, levels, seed):
+        rng = np.random.default_rng(seed)
+        cs = _clients(n)
+        ranked = list(rng.permutation(cs))
+        tree = build_tree("s", cs, ranked, ratio, levels)
+        assert validate_tree(tree, cs) == []
+        asg = tree.assignments()
+        assert set(asg) == set(cs)
+
+
+class TestScheduleCompile:
+    @pytest.mark.parametrize("n,ratio,levels", [
+        (4, 0.5, 3), (8, 0.3, 3), (16, 0.3, 3), (16, 0.25, 4), (2, 0.5, 2),
+    ])
+    def test_groups_partition_axis(self, n, ratio, levels):
+        cs = _clients(n)
+        tree = build_tree("s", cs, cs, ratio, levels)
+        sched = compile_tree(tree)
+        assert validate_schedule(sched) == []
+        assert sched.n_clients == n
+
+    def test_weighted_sum_equivalence_numpy(self):
+        """Simulate the masked grouped-psum levels in numpy and check the
+        tree reproduces the flat weighted sum exactly."""
+        rng = np.random.default_rng(0)
+        for n, ratio, levels in [(8, 0.3, 3), (16, 0.3, 3), (12, 0.5, 4)]:
+            cs = _clients(n)
+            tree = build_tree("s", cs, cs, ratio, levels)
+            sched = compile_tree(tree)
+            w = rng.uniform(0.5, 3.0, n)
+            theta = rng.normal(size=(n, 7))
+            contrib = theta * w[:, None]
+            tw = w.copy()
+            for lvl, groups in enumerate(sched.level_groups):
+                if lvl > 0:
+                    mask = np.asarray(sched.head_masks[lvl - 1], float)
+                    contrib = contrib * mask[:, None]
+                    tw = tw * mask
+                newc = np.zeros_like(contrib)
+                newt = np.zeros_like(tw)
+                for g in groups:
+                    idx = list(g)
+                    newc[idx] = contrib[idx].sum(0)
+                    newt[idx] = tw[idx].sum()
+                contrib, tw = newc, newt
+            got = contrib[0] / tw[0]
+            want = (theta * w[:, None]).sum(0) / w.sum()
+            np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_signature_stability(self):
+        cs = _clients(8)
+        t1 = build_tree("s", cs, cs, 0.3, 3)
+        t2 = build_tree("s", cs, cs, 0.3, 3)
+        assert compile_tree(t1).signature() == compile_tree(t2).signature()
+        assert flat_schedule(8).signature() != compile_tree(t1).signature()

@@ -1,0 +1,172 @@
+"""Integration tests of the SDFLMQ control plane: sessions, roles, the
+host-side hierarchical FedAvg vs a flat oracle, failures, stragglers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.broker import SimBroker
+from repro.core.client import SDFLMQClient
+from repro.core.coordinator import Coordinator, CoordinatorConfig
+from repro.core.parameter_server import ParameterServer
+from repro.core.stats import ClientStats, StatsSimulator
+
+
+def build_fleet(n, levels=3, ratio=0.3, policy="memory_aware", rounds=2):
+    broker = SimBroker()
+    coord = Coordinator(broker, CoordinatorConfig(
+        role_policy=policy, aggregator_ratio=ratio, levels=levels))
+    ps = ParameterServer(broker)
+    sim = StatsSimulator([f"c{i}" for i in range(n)])
+    clients = {}
+    for i in range(n):
+        cid = f"c{i}"
+        clients[cid] = SDFLMQClient(
+            cid, broker, preferred_role="aggregator" if i % 2 else "trainer",
+            stats=sim.sample(cid, 0))
+    clients["c0"].create_fl_session("s", "m", rounds, n, n)
+    for i in range(1, n):
+        clients[f"c{i}"].join_fl_session("s", "m")
+    return broker, coord, ps, clients, sim
+
+
+def run_round(clients, params_of, weight_of):
+    for cid, cl in sorted(clients.items()):
+        cl.set_model("s", params_of(cid), n_samples=weight_of(cid))
+    for cid, cl in sorted(clients.items()):
+        cl.send_local("s")
+
+
+@pytest.mark.parametrize("n,levels,ratio", [
+    (5, 3, 0.3), (8, 2, 0.5), (16, 3, 0.3), (3, 3, 0.4), (24, 4, 0.25),
+])
+def test_tree_fedavg_equals_flat_oracle(n, levels, ratio):
+    _, coord, ps, clients, _ = build_fleet(n, levels, ratio)
+    assert coord.sessions["s"].state.value == "running"
+    rng = np.random.default_rng(n)
+    params = {c: {"w": rng.normal(size=(5, 3)).astype(np.float32)}
+              for c in clients}
+    weights = {c: float(rng.integers(1, 20)) for c in clients}
+    run_round(clients, lambda c: params[c], lambda c: weights[c])
+    g = ps.get_global("s")
+    assert g is not None
+    tw = sum(weights.values())
+    want = sum(params[c]["w"] * weights[c] for c in clients) / tw
+    np.testing.assert_allclose(g["params"]["w"], want, rtol=1e-5, atol=1e-6)
+    # every client received the identical global model
+    for cl in clients.values():
+        np.testing.assert_allclose(cl.get_model("s")["w"], want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 100))
+def test_property_fedavg_exact(n, seed):
+    _, coord, ps, clients, _ = build_fleet(n)
+    rng = np.random.default_rng(seed)
+    params = {c: {"w": rng.normal(size=(4,)).astype(np.float32)}
+              for c in clients}
+    weights = {c: float(rng.uniform(0.5, 9.0)) for c in clients}
+    run_round(clients, lambda c: params[c], lambda c: weights[c])
+    want = sum(params[c]["w"] * weights[c] for c in clients) \
+        / sum(weights.values())
+    np.testing.assert_allclose(ps.get_global("s")["params"]["w"], want,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_session_rejects_when_full_and_wrong_model():
+    broker, coord, *_ = build_fleet(4)
+    extra = SDFLMQClient("late", broker)
+    extra.join_fl_session("s", "m")          # full
+    assert "late" not in coord.sessions["s"].contributors
+    other = SDFLMQClient("wrong", broker)
+    other.join_fl_session("s", "not_m")
+    assert "wrong" not in coord.sessions["s"].contributors
+
+
+def test_duplicate_create_is_dumped():
+    broker, coord, _, clients, _ = build_fleet(4)
+    dup = SDFLMQClient("dup", broker)
+    dup.create_fl_session("s", "other_model", 5, 2, 2)
+    assert coord.sessions["s"].model_name == "m"
+
+
+def test_rearrangement_sends_only_deltas():
+    _, coord, ps, clients, sim = build_fleet(8, policy="round_robin",
+                                             rounds=3)
+    rng = np.random.default_rng(0)
+    p = {"w": rng.normal(size=(3,)).astype(np.float32)}
+    run_round(clients, lambda c: p, lambda c: 1)
+    before = coord.rearrangement_messages
+    for r in range(2):
+        for cid, cl in sorted(clients.items()):
+            cl.signal_ready("s", stats=sim.sample(cid, r + 1))
+        run_round(clients, lambda c: p, lambda c: 1)
+    sent = coord.rearrangement_messages - before
+    assert 0 < sent < 8 * 2, "rearrangement must message only changed clients"
+
+
+def test_failure_triggers_rearrangement_and_round_completes():
+    _, coord, ps, clients, _ = build_fleet(6, rounds=2)
+    rng = np.random.default_rng(1)
+    params = {c: {"w": np.full(3, float(i), np.float32)}
+              for i, c in enumerate(sorted(clients))}
+    dead = "c5"
+    clients.pop(dead).fail()
+    assert dead not in coord.sessions["s"].contributors
+    run_round(clients, lambda c: params[c], lambda c: 1)
+    g = ps.get_global("s")
+    want = np.mean([params[c]["w"] for c in sorted(clients)], axis=0)
+    np.testing.assert_allclose(g["params"]["w"], want, rtol=1e-5)
+
+
+def test_straggler_flush_renormalizes():
+    _, coord, ps, clients, _ = build_fleet(5)
+    rng = np.random.default_rng(2)
+    params = {c: {"w": rng.normal(size=(3,)).astype(np.float32)}
+              for c in clients}
+    straggler = sorted(clients)[-1]
+    for cid, cl in sorted(clients.items()):
+        cl.set_model("s", params[cid], n_samples=2)
+    for cid, cl in sorted(clients.items()):
+        if cid != straggler:
+            cl.send_local("s")
+    coord.force_round_end("s")   # deadline hit -> aggregators flush partials
+    g = ps.get_global("s")
+    live = [c for c in sorted(clients) if c != straggler]
+    want = np.mean([params[c]["w"] for c in live], axis=0)
+    np.testing.assert_allclose(g["params"]["w"], want, rtol=1e-5, atol=1e-6)
+
+
+def test_parameter_server_versions_and_retained_sync():
+    broker, coord, ps, clients, sim = build_fleet(4, rounds=3)
+    rng = np.random.default_rng(3)
+    p = {"w": rng.normal(size=(3,)).astype(np.float32)}
+    run_round(clients, lambda c: p, lambda c: 1)
+    assert ps.versions("s")
+    # a brand-new observer immediately receives the retained global model
+    late = SDFLMQClient("late_observer", broker)
+    late.models.ensure("s", "m")
+    late._subscribe_session("s")
+    np.testing.assert_allclose(late.get_model("s")["w"],
+                               ps.get_global("s")["params"]["w"])
+
+
+def test_elastic_join_mid_session():
+    broker, coord, ps, clients, _ = build_fleet(4, rounds=3)
+    assert coord.sessions["s"].state.value == "running"
+    late = SDFLMQClient("late", broker)
+    # capacity full -> rejected
+    late.join_fl_session("s", "m")
+    assert "late" not in coord.sessions["s"].contributors
+    # grow capacity, join mid-run -> role assigned, next round includes it
+    coord.sessions["s"].capacity_max = 8
+    late.join_fl_session("s", "m")
+    assert "late" in coord.sessions["s"].contributors
+    assert late.arbiter.assignment is not None
+    assert late.arbiter.assignment.train_cluster is not None
+    rng = np.random.default_rng(0)
+    p = {"w": rng.normal(size=(3,)).astype(np.float32)}
+    all_clients = dict(clients, late=late)
+    run_round(all_clients, lambda c: p, lambda c: 1)
+    np.testing.assert_allclose(ps.get_global("s")["params"]["w"], p["w"],
+                               rtol=1e-5)

@@ -1,0 +1,103 @@
+"""HLO analyzer unit tests (loop-aware cost extraction) + ServeEngine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, smoke_config
+from repro.launch.hlo_analysis import analyze, parse_module
+from repro.models import model_api
+from repro.serve.engine import ServeEngine
+
+
+class TestHLOAnalysis:
+    def test_scan_trip_count_scaling(self):
+        def body(x, w):
+            return jnp.tanh(jnp.dot(x, w)), None
+
+        def f(x, ws):
+            return jax.lax.scan(body, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+        comp = jax.jit(f).lower(x, ws).compile()
+        cost = analyze(comp.as_text(), 1)
+        assert 6 in cost.while_trips
+        np.testing.assert_allclose(cost.flops, 6 * 2 * 32 * 64 * 64, rtol=.01)
+
+    def test_nested_scan(self):
+        def inner(x, w):
+            return jnp.dot(x, w), None
+
+        def outer(x, ws):
+            def ob(x, _):
+                return jax.lax.scan(inner, x, ws)[0], None
+            return jax.lax.scan(ob, x, None, length=3)[0]
+
+        x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+        ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+        comp = jax.jit(outer).lower(x, ws).compile()
+        cost = analyze(comp.as_text(), 1)
+        np.testing.assert_allclose(cost.flops, 3 * 4 * 2 * 16 * 32 * 32,
+                                   rtol=0.01)
+
+    def test_unrolled_matches_plain(self):
+        def f(x, w):
+            for _ in range(5):
+                x = jnp.dot(x, w)
+            return x
+        x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        comp = jax.jit(f).lower(x, w).compile()
+        cost = analyze(comp.as_text(), 1)
+        np.testing.assert_allclose(cost.flops, 5 * 2 * 8 * 8 * 8, rtol=0.01)
+
+    def test_parse_synthetic_collective_line(self):
+        hlo = """
+ENTRY %main (p: f32[16,64]) -> f32[16,64] {
+  %p = f32[16,64]{1,0} parameter(0)
+  %ar = f32[16,64]{1,0} all-reduce(%p), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %out = f32[16,64]{1,0} copy(%ar)
+}
+"""
+        cost = analyze(hlo, 8)
+        want = 2 * (4 - 1) / 4 * 16 * 64 * 4
+        np.testing.assert_allclose(cost.coll_bytes, want, rtol=1e-6)
+        assert cost.coll_counts["all-reduce"] == 1
+
+    def test_mem_ops_counted_with_symbol_table(self):
+        hlo = """
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %p = f32[128]{0} parameter(0)
+  ROOT %c = f32[128]{0} copy(%p)
+}
+"""
+        cost = analyze(hlo, 1)
+        assert cost.hbm_bytes == 2 * 128 * 4
+
+
+class TestServeEngine:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        cfg = smoke_config(get_arch("qwen2-7b"))
+        params = model_api.init_params(cfg, jax.random.PRNGKey(0))
+        return ServeEngine(cfg, params, batch_size=2, max_seq=64)
+
+    def test_batched_requests_complete(self, engine):
+        rng = np.random.default_rng(0)
+        reqs = [engine.submit(rng.integers(0, 200, size=8), max_new=4)
+                for _ in range(5)]
+        done = engine.run()
+        assert len(done) == 5
+        for r in done:
+            assert r.done and len(r.out) == 4
+        assert engine.stats["decode_steps"] > 0
+        assert engine.stats["prefill_tokens"] >= 5 * 8
+
+    def test_greedy_is_deterministic(self, engine):
+        prompt = np.arange(10) % 50
+        r1 = engine.submit(prompt, max_new=5)
+        engine.run()
+        r2 = engine.submit(prompt, max_new=5)
+        engine.run()
+        assert r1.out == r2.out

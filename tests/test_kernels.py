@@ -1,0 +1,156 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+with shape/dtype sweeps + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fedavg.ops import fedavg, fedavg_pytree
+from repro.kernels.fedavg.ref import fedavg_ref, fedavg_tree_ref
+from repro.kernels.flash_attn.ops import flash
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.quant8.ops import dequantize, quantize
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_ref
+from repro.kernels.wkv6.ops import wkv
+from repro.kernels.wkv6.ref import wkv_ref
+
+
+class TestFedavgKernel:
+    @pytest.mark.parametrize("K,N,dtype", [
+        (4, 512, jnp.float32), (16, 1000, jnp.float32),
+        (8, 4096, jnp.bfloat16), (2, 63, jnp.float32),
+        (5, 70000, jnp.bfloat16),
+    ])
+    def test_matches_ref(self, K, N, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(K + N), 2)
+        x = jax.random.normal(ks[0], (K, N), jnp.float32).astype(dtype)
+        w = jax.random.uniform(ks[1], (K,)) + 0.1
+        got = fedavg(x, w, block=256, force="pallas")
+        want = fedavg_ref(x, w)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_tree_ref_equals_flat_ref(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+        w = jnp.arange(1.0, 9.0)
+        flat = fedavg_ref(x, w)
+        tree = fedavg_tree_ref(x, w, [(0, 1, 2), (3, 4), (5, 6, 7)])
+        np.testing.assert_allclose(flat, tree, rtol=1e-5)
+
+    def test_pytree_api(self):
+        params = {"a": jnp.ones((4, 3, 5)), "b": jnp.zeros((4, 7))}
+        w = jnp.ones((4,))
+        out = fedavg_pytree(params, w, force="pallas")
+        assert out["a"].shape == (3, 5)
+        np.testing.assert_allclose(out["a"], 1.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(K=st.integers(2, 10), N=st.integers(1, 600),
+           seed=st.integers(0, 99))
+    def test_property_convex_combination(self, K, N, seed):
+        """FedAvg output is within [min, max] of the inputs elementwise and
+        exactly linear in the inputs."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = jax.random.normal(ks[0], (K, N), jnp.float32)
+        w = jax.random.uniform(ks[1], (K,)) + 0.05
+        out = np.asarray(fedavg(x, w, block=128, force="pallas"))
+        xn = np.asarray(x)
+        assert (out <= xn.max(0) + 1e-5).all()
+        assert (out >= xn.min(0) - 1e-5).all()
+        # linearity: fedavg(2x) = 2 fedavg(x)
+        out2 = np.asarray(fedavg(2 * x, w, block=128, force="pallas"))
+        np.testing.assert_allclose(out2, 2 * out, rtol=1e-4, atol=1e-5)
+
+
+class TestQuant8Kernel:
+    @pytest.mark.parametrize("shape,dtype", [
+        ((3, 517), jnp.float32), ((1024,), jnp.bfloat16),
+        ((7, 7, 7), jnp.float32), ((65536,), jnp.bfloat16),
+    ])
+    def test_roundtrip_error_bounded(self, shape, dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+             * 5).astype(dtype)
+        q, s, n = quantize(x, force="pallas")
+        back = dequantize(q, s, n, force="pallas")[:x.size]
+        xf = np.asarray(x, np.float32).reshape(-1)
+        err = np.abs(np.asarray(back) - xf).max()
+        # per-block bound: scale/2 per element
+        assert err <= np.abs(xf).max() / 127.0 + 1e-6
+
+    def test_pallas_equals_ref_bitexact(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (2048,)) * 3
+        q1, s1, _ = quantize(x, force="pallas")
+        q2, s2, _ = quantize(x, force="ref")
+        np.testing.assert_array_equal(np.asarray(q1).reshape(-1),
+                                      np.asarray(q2).reshape(-1))
+        np.testing.assert_allclose(s1, s2, rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 2000), scale=st.floats(1e-3, 1e3),
+           seed=st.integers(0, 99))
+    def test_property_relative_error(self, n, scale, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+        q, s, nn = quantize(x, force="pallas")
+        back = dequantize(q, s, nn, force="pallas")[:n]
+        amax = float(jnp.max(jnp.abs(x)))
+        assert float(jnp.max(jnp.abs(back - x))) <= amax / 127 + 1e-9
+
+
+class TestWkvKernels:
+    def _inputs(self, B, T, H, dk, dv, seed=0, scalar=False):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        r = jax.random.normal(ks[0], (B, T, H, dk)) * 0.5
+        k = jax.random.normal(ks[1], (B, T, H, dk)) * 0.5
+        v = jax.random.normal(ks[2], (B, T, H, dv))
+        wshape = (B, T, H, 1) if scalar else (B, T, H, dk)
+        w = -jnp.exp(jax.random.normal(ks[3], wshape) * 0.5)
+        u = jax.random.normal(ks[4], (H, dk)) * 0.3
+        return r, k, v, w, u
+
+    @pytest.mark.parametrize("B,T,H,dk,dv,chunk", [
+        (2, 32, 3, 8, 16, 8), (1, 64, 2, 16, 16, 16), (1, 16, 1, 4, 4, 4),
+    ])
+    def test_wkv6_interpret_matches_oracle(self, B, T, H, dk, dv, chunk):
+        r, k, v, w, u = self._inputs(B, T, H, dk, dv, seed=T)
+        o1, s1 = wkv(r, k, v, w, u=u, chunk=chunk, force="pallas")
+        o2, s2 = wkv_ref(r, k, v, w, u=u)
+        np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+    def test_wkv6_state_continuation(self):
+        r, k, v, w, u = self._inputs(1, 32, 2, 8, 8, seed=3)
+        _, s_half = wkv(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u=u,
+                        chunk=8, force="pallas")
+        o2, s2 = wkv(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u=u,
+                     s0=s_half, chunk=8, force="pallas")
+        o_ref, s_ref = wkv_ref(r, k, v, w, u=u)
+        np.testing.assert_allclose(o2, o_ref[:, 16:], rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s2, s_ref, rtol=3e-4, atol=3e-4)
+
+    @pytest.mark.parametrize("B,T,H,N,hd", [(2, 32, 3, 8, 16), (1, 24, 2, 4, 8)])
+    def test_ssm_scan_matches_oracle(self, B, T, H, N, hd):
+        r, k, v, w, _ = self._inputs(B, T, H, N, hd, seed=7, scalar=True)
+        o1, s1 = ssm_scan(r, k, v, w, chunk=8, force="pallas")
+        o2, s2 = ssm_ref(r, k, v, w)
+        np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("B,S,H,K,hd,causal,window", [
+        (2, 64, 4, 2, 16, True, None),
+        (1, 128, 4, 4, 32, True, 24),
+        (2, 64, 2, 1, 8, False, None),
+    ])
+    def test_interpret_matches_exact(self, B, S, H, K, hd, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(S), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, K, hd))
+        v = jax.random.normal(ks[2], (B, S, K, hd))
+        o1 = flash(q, k, v, causal=causal, window=window, force="pallas")
+        o2 = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-5)

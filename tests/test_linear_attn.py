@@ -1,0 +1,76 @@
+"""Linear attention (RWKV6 / SSD) equivalences: chunked == recurrent,
+decode continuation, state carry across calls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_attn import chunked, decode_step, recurrent
+
+
+def _inputs(B, T, H, dk, dv, seed, scalar_decay=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, T, H, dk)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, dk)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, dv))
+    wshape = (B, T, H, 1) if scalar_decay else (B, T, H, dk)
+    w = -jnp.exp(jax.random.normal(ks[3], wshape) * 0.5)
+    u = jax.random.normal(ks[4], (H, dk)) * 0.3
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("B,T,H,dk,dv,chunk", [
+    (2, 32, 3, 8, 16, 8), (1, 48, 2, 16, 16, 16), (2, 64, 1, 4, 8, 32),
+    (1, 16, 2, 8, 8, 16),
+])
+@pytest.mark.parametrize("use_u", [True, False])
+def test_chunked_equals_recurrent(B, T, H, dk, dv, chunk, use_u):
+    r, k, v, w, u = _inputs(B, T, H, dk, dv, seed=T + use_u)
+    uu = u if use_u else None
+    o1, s1 = recurrent(r, k, v, w, u=uu)
+    o2, s2 = chunked(r, k, v, w, u=uu, chunk=chunk)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+def test_scalar_decay_ssd_form():
+    r, k, v, w, _ = _inputs(2, 32, 3, 8, 16, seed=5, scalar_decay=True)
+    o1, s1 = recurrent(r, k, v, w, u=None)
+    o2, s2 = chunked(r, k, v, w, u=None, chunk=8)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+def test_state_carry_split_invariance():
+    """Running [0:T/2] then [T/2:T] with carried state == full run."""
+    r, k, v, w, u = _inputs(1, 32, 2, 8, 8, seed=9)
+    o_full, s_full = chunked(r, k, v, w, u=u, chunk=8)
+    h = 16
+    o1, s1 = chunked(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u=u, chunk=8)
+    o2, s2 = chunked(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u=u, s0=s1,
+                     chunk=8)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s2, s_full, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_matches_recurrent_tail():
+    r, k, v, w, u = _inputs(2, 9, 2, 8, 8, seed=11)
+    o_full, s_full = recurrent(r, k, v, w, u=u)
+    _, s_prefix = recurrent(r[:, :-1], k[:, :-1], v[:, :-1], w[:, :-1], u=u)
+    o_t, s_t = decode_step(r[:, -1], k[:, -1], v[:, -1], w[:, -1],
+                           s_prefix, u=u)
+    np.testing.assert_allclose(o_t, o_full[:, -1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s_t, s_full, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(2, 24), chunk=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 50), use_u=st.booleans())
+def test_property_chunk_size_invariance(T, chunk, seed, use_u):
+    r, k, v, w, u = _inputs(1, T, 1, 4, 4, seed=seed)
+    uu = u if use_u else None
+    o_ref, s_ref = recurrent(r, k, v, w, u=uu)
+    o, s = chunked(r, k, v, w, u=uu, chunk=chunk)
+    np.testing.assert_allclose(o, o_ref, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(s, s_ref, rtol=3e-3, atol=3e-3)

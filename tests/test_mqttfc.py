@@ -1,0 +1,74 @@
+"""MQTTFC tests: RFC binding, payload batching, compression, numpy wire."""
+import numpy as np
+import pytest
+
+from repro.core.broker import SimBroker
+from repro.core.mqttfc import MQTTFC, decode, encode
+
+
+def test_encode_decode_numpy_roundtrip():
+    obj = {"a": [np.arange(12, dtype=np.float32).reshape(3, 4)],
+           "k": {"w": np.ones(5, np.int8), "x": 3, "y": "s"},
+           "s": "me"}
+    back = decode(encode(obj))
+    np.testing.assert_array_equal(back["a"][0], obj["a"][0])
+    assert back["a"][0].dtype == np.float32
+    np.testing.assert_array_equal(back["k"]["w"], obj["k"]["w"])
+
+
+def test_rfc_call():
+    b = SimBroker()
+    callee = MQTTFC(b, "callee")
+    caller = MQTTFC(b, "caller")
+    got = []
+    callee.bind("fns/add", lambda x, y, scale=1: got.append((x + y) * scale))
+    caller.call("fns/add", 2, 3, scale=10)
+    assert got == [50]
+
+
+def test_large_payload_batching_reassembly():
+    b = SimBroker()
+    callee = MQTTFC(b, "callee", max_batch_bytes=1024)
+    caller = MQTTFC(b, "caller", max_batch_bytes=1024)
+    got = []
+    callee.bind("fns/blob", lambda arr: got.append(arr))
+    big = np.random.default_rng(0).normal(size=(100, 100)).astype(np.float32)
+    caller.call("fns/blob", big)
+    assert caller.parts_sent > 5          # really chunked
+    assert len(got) == 1
+    np.testing.assert_array_equal(got[0], big)
+
+
+def test_compression_shrinks_wire_bytes():
+    b = SimBroker()
+    callee = MQTTFC(b, "callee")
+    caller = MQTTFC(b, "caller", codec="zlib", compress_threshold=128)
+    got = []
+    callee.bind("fns/z", lambda arr: got.append(arr))
+    compressible = np.zeros((64, 64), np.float32)
+    caller.call("fns/z", compressible)
+    assert caller.bytes_sent < caller.raw_bytes_sent / 2
+    np.testing.assert_array_equal(got[0], compressible)
+
+
+def test_wildcard_raw_handler():
+    b = SimBroker()
+    fc = MQTTFC(b, "x")
+    caller = MQTTFC(b, "y")
+    got = []
+    fc.subscribe_raw("evt/+", lambda topic, payload: got.append(topic))
+    caller.call("evt/a", 1)
+    caller.call("evt/b", 2)
+    assert got == ["evt/a", "evt/b"]
+
+
+def test_unbind_stops_delivery():
+    b = SimBroker()
+    fc = MQTTFC(b, "x")
+    caller = MQTTFC(b, "y")
+    got = []
+    fc.bind("t/f", lambda: got.append(1))
+    caller.call("t/f")
+    fc.unbind("t/f")
+    caller.call("t/f")
+    assert got == [1]

@@ -1,0 +1,115 @@
+"""Multi-device integration tests (compiled FL data plane, aggregation
+schedule equivalence, e2e trainer, dry-run micro-cells).
+
+These need >1 XLA device; jax locks the device count at first init, so
+each test runs in a fresh subprocess with XLA_FLAGS set.  The driver
+scripts double as dev-loop tools in scripts/.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout[-3000:]}\nSTDERR:\n{p.stderr[-3000:]}"
+    return p.stdout
+
+
+@pytest.mark.slow
+def test_fl_step_schedules_agree():
+    out = run_sub(open(os.path.join(ROOT, "scripts/smoke_flstep.py")).read())
+    assert "ALL FL-STEP CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_compressed_and_rsag_schedules_match_flat():
+    code = '''
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ShapeConfig, get_arch, smoke_config
+from repro.core.fl_step import build_fl_round_step, init_state
+from repro.core.topology import AggSchedule, flat_schedule
+from repro.models import inputs as minputs
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = smoke_config(get_arch("hymba-1.5b"))
+shape = ShapeConfig("t", 32, 8, "train")
+key = jax.random.PRNGKey(0)
+with mesh:
+    state = init_state(cfg, mesh, key)
+    batch = minputs.make_batch(cfg, shape, key, clients=4)
+    w = jnp.array([1.0, 2.0, 3.0, 4.0])
+    outs = {}
+    for kind in ("flat", "rs_ag", "compressed"):
+        step = jax.jit(build_fl_round_step(cfg, mesh, AggSchedule(kind, 4)))
+        s, m = step(state, batch, w)
+        outs[kind] = jax.device_get(s["params"])
+for kind in ("rs_ag", "compressed"):
+    for a, b in zip(jax.tree_util.tree_leaves(outs[kind]),
+                    jax.tree_util.tree_leaves(outs["flat"])):
+        tol = 2e-2 if kind == "compressed" else 5e-3
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=tol, atol=tol)
+print("SCHEDULES MATCH")
+'''
+    assert "SCHEDULES MATCH" in run_sub(code)
+
+
+@pytest.mark.slow
+def test_e2e_trainer_with_failure_and_resume():
+    code = '''
+import jax, numpy as np
+from repro.configs.base import get_arch, smoke_config
+from repro.ft.failures import FailurePlan
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import SDFLMQTrainer
+import tempfile, os
+
+cfg = smoke_config(get_arch("qwen1.5-4b"))
+mesh = make_host_mesh(data=4, model=2)
+ck = tempfile.mkdtemp()
+plan = FailurePlan(fail_at={2: ["c3"]})
+tr = SDFLMQTrainer(cfg, mesh, 4, 4, 2, 32, ckpt_dir=ck,
+                   failure_plan=plan)
+ms = tr.run()
+assert len(ms) == 4
+assert ms[-1]["n_clients"] == 3, ms[-1]
+assert all(np.isfinite(m["loss"]) for m in ms)
+# losses should broadly decrease
+assert ms[-1]["loss"] <= ms[0]["loss"] + 0.1
+# resume: new trainer starts from checkpointed round
+tr2 = SDFLMQTrainer(cfg, mesh, 4, 4, 2, 32, ckpt_dir=ck)
+assert tr2.start_round == 4
+print("E2E OK")
+'''
+    assert "E2E OK" in run_sub(code)
+
+
+@pytest.mark.slow
+def test_dryrun_micro_cell_both_meshes():
+    code = '''
+from repro.launch.dryrun import lower_cell
+rec = lower_cell("hymba-1.5b", "decode_32k", False)
+assert rec["status"] == "ok", rec
+rec2 = lower_cell("hymba-1.5b", "decode_32k", True)
+assert rec2["status"] == "ok", rec2
+assert rec2["n_devices"] == 512
+print("DRYRUN MICRO OK")
+'''
+    # dryrun sets its own XLA_FLAGS on import; need 512 here
+    assert "DRYRUN MICRO OK" in run_sub(code, devices=512)
+
+
+@pytest.mark.slow
+def test_moe_impls_match_auto():
+    out = run_sub(open(os.path.join(ROOT, "scripts/smoke_moe_a2a.py")).read())
+    assert "MOE A2A OK" in out

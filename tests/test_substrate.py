@@ -1,0 +1,241 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline, FT policies,
+losses, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.federated import FederatedTokens, dirichlet_split, iid_split
+from repro.data.synthetic import TokenStream, mnist_like
+from repro.dist.compression import (dequantize_int8, quantize_int8,
+                                    quantize_with_error_feedback)
+from repro.ft.failures import FailurePlan, StragglerPolicy, demote_stragglers
+from repro.models.model_api import cross_entropy
+from repro.optim.api import (adafactor, adamw, apply_updates, constant,
+                             make_optimizer, sgdm, warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda: sgdm(constant(0.1)),
+    lambda: adamw(constant(0.05)),
+    lambda: adafactor(constant(0.5)),
+])
+def test_optimizer_minimizes_quadratic(make):
+    opt = make()
+    params = {"x": jnp.array([3.0, -2.0]), "W": jnp.ones((4, 3))}
+    target = {"x": jnp.array([1.0, 1.0]), "W": jnp.zeros((4, 3))}
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree_util.tree_leaves(p),
+                                   jax.tree_util.tree_leaves(target)))
+
+    l0 = loss(params)
+    for step in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.int32(step))
+        params = apply_updates(params, upd)
+    assert loss(params) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    s = opt.init(p)
+    assert s["f"]["w"]["vr"].shape == (64,)
+    assert s["f"]["w"]["vc"].shape == (32,)
+    assert s["f"]["b"]["v"].shape == (64,)
+
+
+def test_warmup_cosine_schedule_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def test_vocab_parallel_ce_matches_naive():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 5, 17))
+    labels = jax.random.randint(key, (2, 5), 0, 17)
+    got = cross_entropy(logits, labels)
+    lp = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    state = {
+        "params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                   "b": jnp.ones((5,), jnp.float32)},
+        "opt": {"m": jnp.full((3, 4), 0.25)},
+        "step": jnp.int32(7),
+    }
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    mgr.save(7, state, {"loss": 1.5})
+    back, meta = mgr.restore_latest(like=state)
+    assert meta["step"] == 7 and meta["loss"] == 1.5
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    st_ = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.full(3, float(s))})
+    assert mgr.latest_step() == 4
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path / "ck"))
+    assert steps == [3, 4]
+    back, _ = mgr.restore_latest(like=st_)
+    np.testing.assert_allclose(np.asarray(back["x"]), 4.0)
+
+
+def test_checkpoint_shape_mismatch_fails(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    mgr.save(1, {"x": jnp.zeros((3,))})
+    with pytest.raises(AssertionError):
+        mgr.restore_latest(like={"x": jnp.zeros((4,))})
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+def test_token_stream_is_deterministic_and_learnable():
+    s1 = TokenStream(100, seed=1)
+    s2 = TokenStream(100, seed=1)
+    b1 = s1.batch(4, 32, step=3)
+    b2 = s2.batch(4, 32, step=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(
+        b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_dirichlet_split_partitions():
+    _, y = mnist_like(2000, seed=0)
+    parts = dirichlet_split(y, 8, alpha=0.3, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) >= 0.99 * 2000     # tiny loss from min-1 fixup ok
+    assert all(len(p) >= 1 for p in parts)
+    # skew: client class histograms differ
+    h0 = np.bincount(y[parts[0]], minlength=10)
+    h1 = np.bincount(y[parts[1]], minlength=10)
+    assert not np.array_equal(h0, h1)
+
+
+def test_iid_split_covers_all():
+    parts = iid_split(100, 7)
+    assert sorted(np.concatenate(parts).tolist()) == list(range(100))
+
+
+def test_federated_tokens_heterogeneous():
+    f = FederatedTokens(vocab=64, n_clients=3, seed=0)
+    g = f.global_batch(3, 2, 16, step=0)
+    assert g["tokens"].shape == (3, 2, 16)
+    assert not np.array_equal(g["tokens"][0], g["tokens"][1])
+
+
+# ---------------------------------------------------------------------------
+# FT policies
+# ---------------------------------------------------------------------------
+
+def test_straggler_policy_cuts_after_deadline():
+    p = StragglerPolicy(deadline_s=1.0, min_fraction=0.5)
+    assert not p.should_cut(0.5, got=3, expected=6)
+    assert p.should_cut(1.5, got=3, expected=6)
+    assert not p.should_cut(9.9, got=2, expected=6)   # below min fraction
+    assert p.should_cut(0.0, got=6, expected=6)
+
+
+def test_straggler_policy_quantile_deadline():
+    p = StragglerPolicy(quantile=0.5)
+    for l in [1.0] * 10:
+        p.observe(l)
+    assert p.deadline() == pytest.approx(1.5)
+
+
+def test_demote_stragglers_reorders():
+    ranked = ["a", "b", "c", "d"]
+    lat = {"a": 10.0, "b": 1.0, "c": 1.0, "d": 1.1}
+    out = demote_stragglers(lat, ranked)
+    assert out.index("a") == len(out) - 1
+
+
+def test_failure_plan_random_is_deterministic():
+    ids = [f"c{i}" for i in range(10)]
+    p1 = FailurePlan.random(ids, 20, seed=3)
+    p2 = FailurePlan.random(ids, 20, seed=3)
+    assert p1.fail_at == p2.fail_at
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quant_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(0), (33, 130)) * 7
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    rowmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float(jnp.max(jnp.abs(back - x) / jnp.maximum(rowmax, 1e-9))) \
+        <= 1 / 127 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), rounds=st.integers(1, 6))
+def test_error_feedback_bounded(seed, rounds):
+    """EF keeps the residual bounded (no drift explosion)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    err = jnp.zeros_like(x)
+    for _ in range(rounds):
+        q, s, err = quantize_with_error_feedback(x, err)
+    amax = float(jnp.max(jnp.abs(x + err)))
+    assert float(jnp.max(jnp.abs(err))) <= amax / 127 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Role optimization policies
+# ---------------------------------------------------------------------------
+
+def test_role_policies_return_valid_rankings():
+    from repro.core.role_optimizer import get_policy, list_policies
+    from repro.core.stats import StatsSimulator
+    sim = StatsSimulator([f"c{i}" for i in range(9)])
+    stats = {c: sim.sample(c, 2) for c in sim.base}
+    for name in list_policies():
+        ranked = get_policy(name)(stats, 2)
+        assert sorted(ranked) == sorted(stats), name
+
+
+def test_genetic_policy_prefers_capable_heads():
+    """GA should not put the slowest-bandwidth client at the front."""
+    from repro.core.role_optimizer import get_policy
+    from repro.core.stats import ClientStats
+    stats = {f"c{i}": ClientStats(f"c{i}", bandwidth_mbps=1000.0,
+                                  cpu_speed=1.0) for i in range(9)}
+    stats["c4"] = ClientStats("c4", bandwidth_mbps=0.5, cpu_speed=1.0)
+    ranked = get_policy("genetic")(stats, 0)
+    n_agg = max(1, round(len(stats) * 0.3))
+    assert "c4" not in ranked[:n_agg]
+    # deterministic
+    assert ranked == get_policy("genetic")(stats, 0)
