@@ -1,15 +1,14 @@
 """Paper §VI "load": broker throughput, MQTTFC batching + compression
-overhead, role-rearrangement message cost (the paper's "negligible cost"
-claim quantified)."""
+overhead, LatencyTransport decoration cost, role-rearrangement message cost
+(the paper's "negligible cost" claim quantified)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
+from repro.api import Federation, LatencyTransport
 from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator, CoordinatorConfig
 from repro.core.mqttfc import MQTTFC
 from repro.core.stats import StatsSimulator
 
@@ -64,24 +63,35 @@ def bench_compression():
     return ("mqttfc_compression", out["zlib"]["us"], out)
 
 
+def bench_latency_transport_overhead(n_msgs: int = 20000):
+    """Decoration cost of the per-link latency model on the hot path."""
+    b = LatencyTransport(SimBroker(), delay_s=0.01, jitter_s=0.005)
+    sink = [0]
+    b.connect("c", lambda m: sink.__setitem__(0, sink[0] + 1))
+    b.subscribe("c", "t/#")
+    payload = b"x" * 256
+    t0 = time.perf_counter()
+    for i in range(n_msgs):
+        b.publish("t/a", payload, sender="c")
+    dt = time.perf_counter() - t0
+    return ("latency_transport_overhead", dt / n_msgs * 1e6,
+            {"msgs_per_s": round(n_msgs / dt),
+             "virtual_time_s": round(b.virtual_time_s, 1)})
+
+
 def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
     """Messages for role rearrangement vs full arrangement per round."""
-    b = SimBroker()
-    coord = Coordinator(b, CoordinatorConfig(role_policy="round_robin"))
+    fed = Federation(role_policy="round_robin")
     sim = StatsSimulator([f"c{i}" for i in range(n_clients)])
-    cls = {f"c{i}": SDFLMQClient(f"c{i}", b, stats=sim.sample(f"c{i}", 0))
-           for i in range(n_clients)}
-    cls["c0"].create_fl_session("s", "m", rounds, n_clients, n_clients)
-    for i in range(1, n_clients):
-        cls[f"c{i}"].join_fl_session("s", "m")
+    clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0))
+               for i in range(n_clients)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients)
     p = {"w": np.zeros(4, np.float32)}
     for r in range(rounds - 1):
-        for cid, cl in sorted(cls.items()):
-            cl.set_model("s", p, 1)
-        for cid, cl in sorted(cls.items()):
-            cl.send_local("s")
-        for cid, cl in sorted(cls.items()):
-            cl.signal_ready("s", stats=sim.sample(cid, r + 1))
+        session.run_round(lambda cid, g, rnd: (p, 1),
+                          stats_fn=lambda cid, rnd: sim.sample(cid, rnd + 1))
+    coord = fed.coordinator
     per_round = coord.rearrangement_messages / max(rounds - 1, 1)
     return ("role_rearrangement_cost", per_round,
             {"clients": n_clients,
@@ -92,7 +102,7 @@ def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
 
 def run(verbose: bool = True):
     rows = [bench_raw_throughput(), bench_batching(), bench_compression(),
-            bench_rearrangement_cost()]
+            bench_latency_transport_overhead(), bench_rearrangement_cost()]
     if verbose:
         for name, us, d in rows:
             print(f"  {name}: {d}")

@@ -1,22 +1,47 @@
 """Paper Fig. 7: MLP accuracy convergence — local training (5% of data)
-vs SDFLMQ federated (5 clients x 1% each, FedAvg through the cluster tree
-over the sim broker)."""
+vs SDFLMQ federated (5 clients x 1% each, aggregated through the cluster
+tree over the sim broker, driven by the repro.api facade).
+
+Also compares aggregation strategies on the same fleet with one client
+poisoned (sign-flipped update): robust strategies (trimmed_mean,
+coordinate_median) should hold accuracy where fedavg degrades.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator, CoordinatorConfig
-from repro.core.parameter_server import ParameterServer
+from repro.api import Federation
 from repro.data.federated import FederatedMNIST
 from repro.train.mlp import accuracy, init_mlp, train_epochs
 
 N_CLIENTS = 5
 ROUNDS = 10
 EPOCHS = 5
+
+
+def _federated_curve(data, rounds: int, strategy: str,
+                     poison: bool = False) -> list[float]:
+    xt, yt = data.test
+    fed = Federation(aggregator_ratio=0.4, levels=3)
+    clients = [fed.client(f"c{i}") for i in range(N_CLIENTS)]
+    session = fed.create_session(f"fig7_{strategy}", "mlp", rounds=rounds,
+                                 participants=clients, strategy=strategy)
+
+    def train(cid, global_params, rnd):
+        i = int(cid[1:])
+        x, y = data.client_data(i)
+        local = train_epochs(global_params, x, y, epochs=EPOCHS, seed=rnd)
+        if poison and i == N_CLIENTS - 1:
+            # byzantine client: sign-flipped, amplified update
+            local = {k: -3.0 * np.asarray(v) for k, v in local.items()}
+        return local, data.n_samples(i)
+
+    curve = []
+    session.on_global_update = lambda p, v: curve.append(accuracy(p, xt, yt))
+    session.run(train, initial_params=init_mlp(seed=0))
+    return curve
 
 
 def run(rounds: int = ROUNDS, verbose: bool = True):
@@ -32,32 +57,9 @@ def run(rounds: int = ROUNDS, verbose: bool = True):
         local = train_epochs(local, xs, ys, epochs=EPOCHS, seed=r)
         local_curve.append(accuracy(local, xt, yt))
 
-    # ---- SDFLMQ federated ----------------------------------------------
-    broker = SimBroker()
-    coord = Coordinator(broker, CoordinatorConfig(levels=3,
-                                                  aggregator_ratio=0.4))
-    ps = ParameterServer(broker)
-    clients = {f"c{i}": SDFLMQClient(f"c{i}", broker) for i in range(N_CLIENTS)}
-    clients["c0"].create_fl_session("fig7", "mlp", rounds, N_CLIENTS,
-                                    N_CLIENTS)
-    for i in range(1, N_CLIENTS):
-        clients[f"c{i}"].join_fl_session("fig7", "mlp")
-
-    global_p = init_mlp(seed=0)
-    fl_curve = []
+    # ---- SDFLMQ federated (facade) -------------------------------------
     t0 = time.perf_counter()
-    for r in range(rounds):
-        for i, (cid, cl) in enumerate(sorted(clients.items())):
-            x, y = data.client_data(i)
-            local_p = train_epochs(global_p, x, y, epochs=EPOCHS, seed=r)
-            cl.set_model("fig7", local_p, n_samples=data.n_samples(i))
-        for cid, cl in sorted(clients.items()):
-            cl.send_local("fig7")
-        g = ps.get_global("fig7")["params"]
-        global_p = {k: np.asarray(v) for k, v in g.items()}
-        fl_curve.append(accuracy(global_p, xt, yt))
-        for cid, cl in sorted(clients.items()):
-            cl.signal_ready("fig7")
+    fl_curve = _federated_curve(data, rounds, "fedavg")
     wall = time.perf_counter() - t0
 
     rows = []
@@ -75,6 +77,19 @@ def run(rounds: int = ROUNDS, verbose: bool = True):
                  {"fl_final": round(fl_curve[-1], 4),
                   "local_final": round(local_curve[-1], 4),
                   "gap": round(final_gap, 4)}))
+
+    # ---- strategy robustness: one poisoned client ----------------------
+    pr = min(rounds, 5)
+    finals = {}
+    for strat in ("fedavg", "trimmed_mean", "coordinate_median"):
+        t0 = time.perf_counter()
+        c = _federated_curve(data, pr, strat, poison=True)
+        finals[strat] = round(c[-1], 4)
+        rows.append(("strategy_under_poison",
+                     (time.perf_counter() - t0) * 1e6,
+                     {"strategy": strat, "final_acc": finals[strat]}))
+    if verbose:
+        print(f"  poisoned-client final acc: {finals}")
     return rows
 
 

@@ -1,34 +1,29 @@
 """Paper §VI "memory": peak aggregator accumulator bytes per client —
 hierarchical clustering vs centralized aggregation.  SDFLMQ's claim: the
-per-node aggregation memory drops when the load is spread over heads."""
+per-node aggregation memory drops when the load is spread over heads.
+Driven through the repro.api facade; "stack" strategies (trimmed_mean)
+additionally show the gather-up-the-tree memory cost of robust
+aggregation."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator, CoordinatorConfig
-from repro.core.parameter_server import ParameterServer
+from repro.api import Federation
 from repro.train.mlp import init_mlp
 
 
-def run_case(n_clients: int, hierarchical: bool):
-    b = SimBroker()
-    coord = Coordinator(b, CoordinatorConfig(
+def run_case(n_clients: int, hierarchical: bool, strategy: str = "fedavg"):
+    fed = Federation(
         levels=3 if hierarchical else 1,
-        aggregator_ratio=0.3 if hierarchical else 1.0 / n_clients))
-    ps = ParameterServer(b)
-    cls = {f"c{i}": SDFLMQClient(f"c{i}", b) for i in range(n_clients)}
-    cls["c0"].create_fl_session("s", "m", 1, n_clients, n_clients)
-    for i in range(1, n_clients):
-        cls[f"c{i}"].join_fl_session("s", "m")
+        aggregator_ratio=0.3 if hierarchical else 1.0 / n_clients)
+    clients = [fed.client(f"c{i}") for i in range(n_clients)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients,
+                                 strategy=strategy)
     p = init_mlp()
-    for cid, cl in sorted(cls.items()):
-        cl.set_model("s", p, 1)
-    for cid, cl in sorted(cls.items()):
-        cl.send_local("s")
-    assert ps.get_global("s") is not None
-    peaks = [cl.models.get("s").peak_acc_bytes for cl in cls.values()]
+    session.run_round(lambda cid, g, r: (p, 1))
+    assert session.global_params() is not None
+    peaks = [cl.models.get("s").peak_acc_bytes
+             for cl in session.participants.values()]
     return max(peaks), float(np.mean([x for x in peaks if x > 0]))
 
 
@@ -47,6 +42,21 @@ def run(verbose: bool = True):
             d = rows[-1][2]
             print(f"  n={n}: hier peak {d['hier_max_mb']}MB vs central "
                   f"{d['central_max_mb']}MB (saving {d['saving']:.0%})")
+    # robust strategies pay for exactness: contributions are stacked, not
+    # summed, so aggregator memory grows with subtree size
+    max_r, _ = run_case(16, True, strategy="trimmed_mean")
+    max_s, _ = run_case(16, True, strategy="fedavg")
+    rows.append(("robust_strategy_memory", max_r, {
+        "clients": 16,
+        "trimmed_mean_max_mb": round(max_r / 2**20, 2),
+        "fedavg_max_mb": round(max_s / 2**20, 2),
+        "overhead_x": round(max_r / max(max_s, 1), 2),
+    }))
+    if verbose:
+        d = rows[-1][2]
+        print(f"  robust overhead at n=16: trimmed_mean "
+              f"{d['trimmed_mean_max_mb']}MB vs fedavg "
+              f"{d['fedavg_max_mb']}MB ({d['overhead_x']}x)")
     return rows
 
 

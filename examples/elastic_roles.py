@@ -1,57 +1,59 @@
-"""Dynamic role management under churn — the paper's core mechanism.
+"""Dynamic role management under churn — the paper's core mechanism, driven
+through the ``repro.api`` facade over a latency-modeled edge network.
 
 Watch the coordinator rearrange aggregator roles as client stats drift,
 clients die (LWT -> failure detector), and new clients join; each round
 prints the cluster heads and exactly which clients received role messages.
+The broker is wrapped in a ``LatencyTransport`` (per-link delay/jitter), so
+the run also reports modeled network time per link.
 
     PYTHONPATH=src python examples/elastic_roles.py
 """
 import numpy as np
 
-from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator, CoordinatorConfig
-from repro.core.parameter_server import ParameterServer
+from repro.api import Federation
 from repro.core.stats import StatsSimulator
 
 N, ROUNDS = 10, 6
-broker = SimBroker()
-coord = Coordinator(broker, CoordinatorConfig(role_policy="perf_aware",
-                                              aggregator_ratio=0.3))
-ps = ParameterServer(broker)
+
+fed = Federation(role_policy="perf_aware", aggregator_ratio=0.3,
+                 latency=dict(delay_s=0.02, jitter_s=0.01, seed=7))
 sim = StatsSimulator([f"c{i}" for i in range(N + 2)], seed=7)
-clients = {f"c{i}": SDFLMQClient(f"c{i}", broker,
-                                 stats=sim.sample(f"c{i}", 0))
-           for i in range(N)}
-clients["c0"].create_fl_session("s", "m", ROUNDS, N, N + 2)
-for i in range(1, N):
-    clients[f"c{i}"].join_fl_session("s", "m")
-coord.expire_waiting("s")   # waiting time elapsed: start at quorum
+# slow uplink for one client: the perf-aware policy should avoid heading it
+fed.transport.set_link("c7", delay_s=0.25, jitter_s=0.05)
+
+clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0))
+           for i in range(N)]
+session = fed.create_session("s", "m", rounds=ROUNDS, participants=clients,
+                             capacity=(N, N + 2))
+session.start()   # waiting time elapsed: start at quorum
 
 p = {"w": np.zeros(8, np.float32)}
+coord = fed.coordinator
 for r in range(ROUNDS):
-    heads = sorted({c.head for c in coord.tree_of("s").all_clusters()})
+    heads = sorted({c.head for c in session.tree().all_clusters()})
     before = coord.rearrangement_messages
     print(f"round {r}: heads={heads}")
     if r == 2:
         print("  !! c3 dies abnormally (LWT fires)")
-        clients.pop("c3").fail()
+        session.fail("c3")
     if r == 4:
         print("  ++ c10 joins elastically")
-        nc = SDFLMQClient("c10", broker, stats=sim.sample("c10", 0))
-        nc.join_fl_session("s", "m")
-        coord._arrange("s", rearrange=True)
-        clients["c10"] = nc
-    for cid, cl in sorted(clients.items()):
-        cl.set_model("s", p, 1)
-    for cid, cl in sorted(clients.items()):
-        cl.send_local("s")
-    for cid, cl in sorted(clients.items()):
-        st = sim.sample(cid, r + 1)
-        st.last_round_s = float(np.random.default_rng(r).uniform(0.5, 3))
-        cl.signal_ready("s", stats=st)
+        session.join(fed.client("c10", stats=sim.sample("c10", 0)))
+
+    def stats(cid, round_idx):
+        st = sim.sample(cid, round_idx + 1)
+        st.last_round_s = float(np.random.default_rng(round_idx).uniform(0.5, 3))
+        return st
+
+    session.run_round(lambda cid, g, rnd: (p, 1), stats_fn=stats)
     print(f"  role messages this round: "
           f"{coord.rearrangement_messages - before} "
-          f"(vs {len(clients)} clients)")
+          f"(vs {len(session.participants)} clients)")
+
 print("total role changes:",
-      sum(c.arbiter.role_changes for c in clients.values()))
+      sum(c.arbiter.role_changes for c in session.participants.values()))
+net = fed.broker.sys_stats()
+print(f"modeled network time: {net['virtual_time_s']:.2f}s over "
+      f"{net['messages_sent']} deliveries; "
+      f"c7 mean latency {net['links'].get('c7', {}).get('mean_latency_ms', 0)}ms")

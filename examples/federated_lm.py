@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--model-dim", type=int, default=0)
     ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--strategy", default="fedavg",
+                    help="aggregation strategy: fedavg | fedprox | "
+                         "trimmed_mean | coordinate_median")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -47,8 +50,9 @@ def main():
     plan = FailurePlan(fail_at={args.rounds // 2: [f"c{args.clients - 1}"]})
     tr = SDFLMQTrainer(cfg, mesh, args.clients, args.rounds,
                        args.batch_per_client, args.seq, ckpt_dir=ckpt,
-                       failure_plan=plan)
-    print(f"clients={args.clients} rounds={args.rounds} ckpt={ckpt}")
+                       failure_plan=plan, strategy=args.strategy)
+    print(f"clients={args.clients} rounds={args.rounds} "
+          f"strategy={args.strategy} ckpt={ckpt}")
     for m in tr.run():
         print(f"round {m['round']:3d} loss {m['loss']:.4f} "
               f"({m['time_s']:.2f}s, {m['n_clients']} clients, "

@@ -1,66 +1,56 @@
-"""Quickstart — the paper's Listing 1, working end to end.
+"""Quickstart — the paper's Listing-1 scenario through the ``repro.api``
+facade: no manual broker/coordinator/parameter-server wiring, no hand-rolled
+round loop.
 
-A fully connected MLP is trained locally for 5 epochs per round and sent
-to the cluster aggregators for global model updating; SDFLMQ appears in
-exactly three places (session create/join, send_local, wait_global_update).
+``Federation`` owns the infrastructure; ``create_session`` registers the
+session with the coordinator (first participant creates, the rest join);
+``session.run`` drives local training + hierarchical aggregation over the
+cluster tree each round.  The aggregation strategy is selectable by name —
+try ``python examples/quickstart.py trimmed_mean`` (robust to a poisoned
+client) or ``fedadam`` (server-side adaptive optimizer).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [strategy]
 """
-import numpy as np
+import sys
 
-from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator
-from repro.core.parameter_server import ParameterServer
+from repro.api import Federation, list_strategies
 from repro.data.federated import FederatedMNIST
 from repro.train.mlp import accuracy, init_mlp, train_epochs
 
 FL_ROUNDS = 2
 N_CLIENTS = 5
+STRATEGY = sys.argv[1] if len(sys.argv) > 1 else "fedavg"
+assert STRATEGY in list_strategies(), f"pick one of {list_strategies()}"
 
-# --- infrastructure (an edge broker + coordinator service) ---------------
-broker = SimBroker()
-coordinator = Coordinator(broker)
-param_server = ParameterServer(broker)
 data = FederatedMNIST(N_CLIENTS, frac_per_client=0.01, total=10000)
-
-# --- Setup SDFLMQ clients (paper Listing 1) --------------------------------
-fl_clients = []
-for i in range(N_CLIENTS):
-    fl_client = SDFLMQClient(client_id=f"client_{i}", broker=broker,
-                             preferred_role="aggregator" if i == 0 else "trainer")
-    fl_clients.append(fl_client)
-
-# USE CODE BELOW TO CREATE A SESSION:
-fl_clients[0].create_fl_session(session_id="session_01",
-                                model_name="mlp",
-                                fl_rounds=FL_ROUNDS,
-                                session_capacity_min=N_CLIENTS,
-                                session_capacity_max=N_CLIENTS)
-
-# USE CODE BELOW TO JOIN A SESSION:
-for fl_client in fl_clients[1:]:
-    fl_client.join_fl_session(session_id="session_01", model_name="mlp",
-                              fl_rounds=FL_ROUNDS)
-
-# --- Optimization loop ------------------------------------------------------
-model = init_mlp(seed=0)
 xt, yt = data.test
-for rnd in range(FL_ROUNDS):
-    for i, fl_client in enumerate(fl_clients):
-        x, y = data.client_data(i)
-        local = train_epochs(model, x, y, epochs=5, seed=rnd)   # local training
-        # Federated learning
-        fl_client.set_model("session_01", local, n_samples=data.n_samples(i))
-    for fl_client in fl_clients:
-        fl_client.send_local("session_01")
-    model = fl_clients[0].wait_global_update("session_01")
-    print(f"round {rnd}: global model v{fl_clients[0].models.get('session_01').global_version}"
-          f" test acc {accuracy(model, xt, yt):.3f}")
-    for fl_client in fl_clients:           # round-status update (§III-E4)
-        fl_client.signal_ready("session_01")
 
-tree = coordinator.tree_of("session_01")
+# --- one entry point: broker + coordinator + parameter server ------------
+fed = Federation()
+clients = [fed.client(f"client_{i}",
+                      preferred_role="aggregator" if i == 0 else "trainer")
+           for i in range(N_CLIENTS)]
+session = fed.create_session("session_01", model_name="mlp",
+                             rounds=FL_ROUNDS, participants=clients,
+                             strategy=STRATEGY)
+
+
+# --- local training callback: (client_id, global, round) -> (params, n) --
+def train(client_id, global_params, round_idx):
+    i = int(client_id.rsplit("_", 1)[1])
+    x, y = data.client_data(i)
+    local = train_epochs(global_params, x, y, epochs=5, seed=round_idx)
+    return local, data.n_samples(i)
+
+
+session.on_global_update = lambda params, version: print(
+    f"  global v{version}: test acc {accuracy(params, xt, yt):.3f}")
+session.on_round_start = lambda rnd: print(f"round {rnd} ({STRATEGY})")
+
+session.run(train, initial_params=init_mlp(seed=0))
+
+tree = session.tree()
 print("cluster tree:", [(c.cluster_id, c.head, len(c.members))
                         for c in tree.all_clusters()])
-print("broker stats:", broker.sys_stats()["messages_sent"], "messages delivered")
+print("broker stats:", fed.broker.sys_stats()["messages_sent"],
+      "messages delivered")

@@ -1,0 +1,47 @@
+"""repro.api — the single entry point for running SDFLMQ federations.
+
+    from repro.api import Federation
+    fed = Federation()                       # broker + coordinator + PS
+    clients = [fed.client(f"c{i}") for i in range(5)]
+    session = fed.create_session("s1", model_name="mlp", rounds=3,
+                                 participants=clients, strategy="fedavg")
+    session.run(train_fn, initial_params=init)
+
+Submodules:
+    federation — Federation / FederatedSession facade
+    strategies — pluggable AggregationStrategy registry (fedavg, fedprox,
+                 trimmed_mean, coordinate_median, fedadam); one surface for
+                 both the host MQTT path and the compiled collective path
+    transport  — Transport protocol + LatencyTransport edge-network model
+
+Heavy imports are lazy (PEP 562) so core modules can import
+``repro.api.strategies`` without dragging in the full facade.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "Federation": ("repro.api.federation", "Federation"),
+    "FederatedSession": ("repro.api.federation", "FederatedSession"),
+    "AggregationStrategy": ("repro.api.strategies", "AggregationStrategy"),
+    "get_strategy": ("repro.api.strategies", "get_strategy"),
+    "register_strategy": ("repro.api.strategies", "register_strategy"),
+    "list_strategies": ("repro.api.strategies", "list_strategies"),
+    "Transport": ("repro.api.transport", "Transport"),
+    "LatencyTransport": ("repro.api.transport", "LatencyTransport"),
+    "LinkModel": ("repro.api.transport", "LinkModel"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return __all__

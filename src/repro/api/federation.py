@@ -1,0 +1,282 @@
+"""The SDFLMQ facade: one entry point for running federations.
+
+``Federation`` wires the infrastructure (transport/broker(s), coordinator,
+parameter server) once; ``FederatedSession`` handles run the paper's round
+protocol (create/join, local train, send, global update, readiness) so that
+examples, benchmarks, and drivers stop hand-rolling the loop::
+
+    from repro.api import Federation
+
+    fed = Federation()
+    clients = [fed.client(f"c{i}") for i in range(5)]
+    session = fed.create_session("s1", model_name="mlp", rounds=3,
+                                 participants=clients,
+                                 strategy="trimmed_mean")
+
+    def train(client_id, global_params, round_idx):
+        local = my_local_training(global_params)
+        return local, n_samples
+
+    session.run(train, initial_params=init)
+    final = session.global_params()
+
+Edge-network scenarios: pass ``latency=dict(delay_s=..., jitter_s=...,
+drop_p=...)`` (or a prebuilt LatencyTransport) to model per-link delay and
+loss on the control/model plane.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Union
+
+from repro.api.strategies import AggregationStrategy, get_strategy
+from repro.api.transport import LatencyTransport, Transport
+from repro.core.broker import SimBroker
+from repro.core.client import Params, SDFLMQClient
+from repro.core.coordinator import Coordinator, CoordinatorConfig
+from repro.core.parameter_server import ParameterServer
+from repro.core.stats import ClientStats
+
+TrainFn = Callable[[str, Optional[Params], int], tuple[Params, int]]
+
+
+class Federation:
+    """Owns the infrastructure of one federation: a transport, the
+    coordinator service, and the parameter server."""
+
+    def __init__(self, transport: Optional[Transport] = None,
+                 latency: Optional[dict] = None,
+                 role_policy: str = "memory_aware",
+                 aggregator_ratio: float = 0.3,
+                 levels: int = 3,
+                 round_deadline_s: float = 0.0,
+                 coordinator_cfg: Optional[CoordinatorConfig] = None):
+        transport = transport if transport is not None else SimBroker()
+        if latency:
+            transport = LatencyTransport(transport, **latency)
+        self.transport = transport
+        self.coordinator = Coordinator(
+            transport,
+            coordinator_cfg or CoordinatorConfig(
+                role_policy=role_policy, aggregator_ratio=aggregator_ratio,
+                levels=levels, round_deadline_s=round_deadline_s))
+        self.param_server = ParameterServer(transport)
+        self.clients: dict[str, SDFLMQClient] = {}
+        self.sessions: dict[str, "FederatedSession"] = {}
+
+    # alias: the transport of a single-broker federation IS the broker
+    @property
+    def broker(self) -> Transport:
+        return self.transport
+
+    def client(self, client_id: str, preferred_role: str = "trainer",
+               stats: Optional[ClientStats] = None) -> SDFLMQClient:
+        """Create (or return) a client endpoint attached to this federation."""
+        if client_id not in self.clients:
+            self.clients[client_id] = SDFLMQClient(
+                client_id, self.transport, preferred_role=preferred_role,
+                stats=stats)
+        return self.clients[client_id]
+
+    def create_session(self, session_id: str, model_name: str, rounds: int,
+                       participants: Iterable[Union[str, SDFLMQClient]],
+                       strategy: Union[str, AggregationStrategy] = "fedavg",
+                       capacity: Optional[tuple[int, int]] = None,
+                       session_time_s: float = 3600.0,
+                       waiting_time_s: float = 120.0) -> "FederatedSession":
+        """First participant creates the session, the rest join.  ``capacity``
+        defaults to exactly the participant set (session starts immediately
+        once everyone has joined); pass ``(min, max)`` to leave headroom for
+        elastic joins — then call ``session.start()`` once quorum suffices.
+
+        A client endpoint can hold aggregation *roles* in only one session
+        at a time (the RoleArbiter tracks a single assignment, as in the
+        paper); run concurrent sessions with disjoint client sets."""
+        members = [p if isinstance(p, SDFLMQClient) else self.client(p)
+                   for p in participants]
+        assert members, "a session needs at least one participant"
+        cap_min, cap_max = capacity or (len(members), len(members))
+        # names pass through untouched (resolve from the shared registry);
+        # tuned instances get a session-scoped registration in the client
+        session = FederatedSession(self, session_id, model_name,
+                                   get_strategy(strategy))
+        self.sessions[session_id] = session
+        members[0].create_fl_session(
+            session_id, model_name, fl_rounds=rounds,
+            session_capacity_min=cap_min, session_capacity_max=cap_max,
+            session_time_s=session_time_s, waiting_time_s=waiting_time_s,
+            strategy=strategy)
+        session._admit(members[0])
+        for m in members[1:]:
+            session.join(m, rounds=rounds)
+        return session
+
+
+class FederatedSession:
+    """Handle to one FL session: the round loop, membership, callbacks."""
+
+    def __init__(self, federation: Federation, session_id: str,
+                 model_name: str, strategy: AggregationStrategy):
+        self.federation = federation
+        self.session_id = session_id
+        self.model_name = model_name
+        self.strategy = strategy
+        self.participants: dict[str, SDFLMQClient] = {}
+        self.on_global_update: Optional[Callable] = None
+        self._on_round_start: Optional[Callable] = None
+        self._initial: Optional[Params] = None
+        self._seen_version = 0          # dedupe fan-in from many clients
+        self._seen_round = -1
+
+    # ------------------------------------------------------------------
+    # Callbacks
+    # ------------------------------------------------------------------
+    @property
+    def on_round_start(self) -> Optional[Callable]:
+        return self._on_round_start
+
+    @on_round_start.setter
+    def on_round_start(self, fn: Optional[Callable]) -> None:
+        """Round 0 starts while create_session is still executing, before
+        the caller can possibly assign this hook — replay the last seen
+        round_start on assignment so round 0 is observable."""
+        self._on_round_start = fn
+        if fn is not None and self._seen_round >= 0:
+            fn(self._seen_round)
+
+    # ------------------------------------------------------------------
+    # Membership
+    # ------------------------------------------------------------------
+    def _admit(self, client: SDFLMQClient) -> None:
+        if client.client_id in self.participants:
+            return
+        self.participants[client.client_id] = client
+        # chain, don't clobber: a client may deliver events for several
+        # sessions (each hook filters on its own session id)
+        prev_g, prev_r = client.on_global_update, client.on_round_start
+
+        def g_hook(sid, params, version):
+            if prev_g:
+                prev_g(sid, params, version)
+            self._client_global_update(sid, params, version)
+
+        def r_hook(sid, round_idx):
+            if prev_r:
+                prev_r(sid, round_idx)
+            self._client_round_start(sid, round_idx)
+
+        client.on_global_update = g_hook
+        client.on_round_start = r_hook
+
+    def join(self, client: Union[str, SDFLMQClient], rounds: int = 0,
+             preferred_role: Optional[str] = None) -> bool:
+        """Join (also mid-run: the coordinator rearranges roles).  Returns
+        whether the coordinator admitted the client."""
+        cl = (client if isinstance(client, SDFLMQClient)
+              else self.federation.client(client))
+        cl.join_fl_session(self.session_id, self.model_name, fl_rounds=rounds,
+                           preferred_role=preferred_role)
+        ok = cl.client_id in self._session.contributors
+        if ok:
+            self._admit(cl)
+        return ok
+
+    def leave(self, client_id: str) -> None:
+        """Graceful leave: the coordinator rearranges the remaining tree."""
+        cl = self.participants.pop(client_id, None)
+        if cl is not None:
+            cl.leave(self.session_id)
+
+    def fail(self, client_id: str) -> None:
+        """Abnormal death: the broker fires the LWT, the coordinator's
+        failure detector removes the client and rearranges."""
+        cl = self.participants.pop(client_id, None)
+        if cl is not None:
+            cl.fail()
+            self.federation.clients.pop(client_id, None)
+
+    def start(self) -> bool:
+        """Waiting time elapsed: start at quorum even if not full."""
+        return self.federation.coordinator.expire_waiting(self.session_id)
+
+    # ------------------------------------------------------------------
+    # Round loop
+    # ------------------------------------------------------------------
+    def run_round(self, train_fn: TrainFn,
+                  stats_fn: Optional[Callable] = None) -> Optional[Params]:
+        """One federated round: local training on every participant, models
+        up the cluster tree, readiness signals (round-status updates, paper
+        §III-E4).  ``stats_fn(client_id, round_idx) -> ClientStats`` feeds
+        fresh system stats to the role optimizer.  Returns the new global."""
+        rnd = self.round_idx
+        base = self.global_params()
+        if base is None:
+            base = self._initial
+        for cid, cl in sorted(self.participants.items()):
+            params, n_samples = train_fn(cid, base, rnd)
+            cl.set_model(self.session_id, params, n_samples=n_samples)
+        for cid, cl in sorted(self.participants.items()):
+            cl.send_local(self.session_id)
+        new_global = self.global_params()
+        for cid, cl in sorted(self.participants.items()):
+            cl.signal_ready(self.session_id,
+                            stats=stats_fn(cid, rnd) if stats_fn else None)
+        return new_global
+
+    def run(self, train_fn: TrainFn, rounds: Optional[int] = None,
+            initial_params: Optional[Params] = None,
+            stats_fn: Optional[Callable] = None) -> list[Params]:
+        """Round loop until the session terminates (or ``rounds`` done).
+        ``initial_params`` seeds round 0 (before any global exists)."""
+        if initial_params is not None:
+            self._initial = initial_params
+        globals_seen: list[Params] = []
+        while self.state == "running" and (rounds is None
+                                           or len(globals_seen) < rounds):
+            g = self.run_round(train_fn, stats_fn=stats_fn)
+            if g is not None:
+                globals_seen.append(g)
+        return globals_seen
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    @property
+    def _session(self):
+        return self.federation.coordinator.sessions[self.session_id]
+
+    @property
+    def state(self) -> str:
+        return self._session.state.value
+
+    @property
+    def round_idx(self) -> int:
+        return self._session.round_idx
+
+    def global_params(self) -> Optional[Params]:
+        g = self.federation.param_server.get_global(self.session_id)
+        return g["params"] if g else None
+
+    def global_version(self) -> int:
+        g = self.federation.param_server.get_global(self.session_id)
+        return g["version"] if g else 0
+
+    def tree(self):
+        return self.federation.coordinator.tree_of(self.session_id)
+
+    def contributors(self) -> list[str]:
+        return sorted(self._session.contributors)
+
+    # ------------------------------------------------------------------
+    def _client_global_update(self, sid: str, params: Params,
+                              version: int) -> None:
+        # every participant's client fires this; emit once per version
+        if sid == self.session_id and version > self._seen_version:
+            self._seen_version = version
+            if self.on_global_update:
+                self.on_global_update(params, version)
+
+    def _client_round_start(self, sid: str, round_idx: int) -> None:
+        if sid == self.session_id and round_idx > self._seen_round:
+            self._seen_round = round_idx
+            if self.on_round_start:
+                self.on_round_start(round_idx)

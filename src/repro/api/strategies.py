@@ -1,0 +1,212 @@
+"""Pluggable aggregation strategies — ONE implementation surface consumed by
+both SDFLMQ data paths:
+
+  * the host-side accumulator path (core/client.py): weighted partial sums /
+    stacked contributions travel up the cluster tree over MQTT;
+  * the compiled tree-collective path (core/aggregation.py): the same math
+    runs as grouped psums / all-gathers under shard_map on the mesh.
+
+A strategy is three small hooks over parameter pytrees, written against an
+array namespace ``xp`` (numpy on the host path, jax.numpy when compiled):
+
+  * ``premap(params, ref, xp)``       — transform one client's raw model
+    before weighting/summation (fedprox mixes toward the previous global).
+    Applied exactly once, at the leaf; partial sums are never re-premapped.
+  * ``finalize(mean, ref, state, xp)``— turn the weighted mean into the new
+    global (+ new server state).  fedavg returns the mean untouched, so the
+    fedavg fast path is bit-identical to plain weighted averaging.
+  * ``combine(stacked, weights, xp)`` — for ``reduction == "stack"``
+    strategies (trimmed mean, coordinate median): full client-stacked
+    parameters (leading dim = contributors) -> global.  These are not
+    decomposable into partial sums, so the tree forwards the stacked
+    contributions unchanged; permutation invariance (sorting) makes the
+    tree result bit-identical to the flat reference.
+
+``reduction`` is "sum" (partial sums up the tree) or "stack" (gather up the
+tree).  ``stateful`` strategies (fedadam) thread server state through
+``finalize``; on the host path the root aggregator publishes the state with
+the global model (retained), so whichever client becomes next round's root
+resumes it — MQTT retained-message sync doubling as optimizer-state
+replication.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+
+def _tmap(fn, *trees):
+    """Map over matching pytrees of dict/list/tuple containers.  Pure
+    Python: the host MQTT path (flat numpy dicts) must not pay the jax
+    import; the compiled path's nested param dicts map the same way."""
+    t0 = trees[0]
+    if isinstance(t0, dict):
+        return {k: _tmap(fn, *(t[k] for t in trees)) for k in t0}
+    if isinstance(t0, (list, tuple)):
+        return type(t0)(_tmap(fn, *xs) for xs in zip(*trees))
+    return fn(*trees)
+
+
+class AggregationStrategy:
+    """Base: plain weighted FedAvg semantics."""
+
+    name = "fedavg"
+    reduction = "sum"          # "sum" | "stack"
+    compiled = True            # supported by the compiled collective path
+    stateful = False
+    needs_ref = False          # premap/finalize reads the previous global
+
+    # -- sum-reduction hooks ------------------------------------------------
+    def premap(self, params, ref, xp):
+        """One client's raw model -> contribution (pre-weighting).  ``ref``
+        is the previous global model (None on the first round)."""
+        return params
+
+    def finalize(self, mean, ref, state, xp):
+        """Weighted mean -> (global, new_server_state)."""
+        return mean, None
+
+    # -- stack-reduction hook ----------------------------------------------
+    def combine(self, stacked, weights, xp):
+        """Client-stacked params (leading dim = n) + weights (n,) -> global."""
+        raise NotImplementedError(f"{self.name} is not a stack strategy")
+
+    def init_state(self, params):
+        return None
+
+    def describe(self) -> str:
+        return (self.__doc__ or "").strip().split("\n")[0]
+
+
+class FedAvg(AggregationStrategy):
+    """Weighted federated averaging (McMahan et al.) — the paper's default."""
+
+
+class FedProx(AggregationStrategy):
+    """Proximal aggregation: each contribution is shrunk toward the previous
+    global before averaging, damping client drift on non-IID data
+    (aggregation-side analogue of the FedProx proximal term)."""
+
+    name = "fedprox"
+    needs_ref = True
+
+    def __init__(self, mu: float = 0.1):
+        assert 0.0 <= mu < 1.0, mu
+        self.mu = float(mu)
+
+    def premap(self, params, ref, xp):
+        if ref is None:
+            return params
+        mu = self.mu
+        return _tmap(lambda p, g: (1.0 - mu) * xp.asarray(p, xp.float32)
+                     + mu * xp.asarray(g, xp.float32), params, ref)
+
+
+class TrimmedMean(AggregationStrategy):
+    """Byzantine-robust coordinate-wise trimmed mean: drop the k highest and
+    k lowest values per coordinate (k = floor(beta * n)), average the rest.
+    Ignores sample weights (standard for robust aggregation)."""
+
+    name = "trimmed_mean"
+    reduction = "stack"
+
+    def __init__(self, beta: float = 0.2):
+        assert 0.0 <= beta < 0.5, beta
+        self.beta = float(beta)
+
+    def combine(self, stacked, weights, xp):
+        def one(s):
+            n = s.shape[0]
+            k = int(self.beta * n)
+            if 2 * k >= n:
+                k = (n - 1) // 2
+            srt = xp.sort(xp.asarray(s, xp.float32), axis=0)
+            if k:
+                srt = srt[k:n - k]
+            return xp.mean(srt, axis=0)
+        return _tmap(one, stacked)
+
+
+class CoordinateMedian(AggregationStrategy):
+    """Byzantine-robust coordinate-wise median over all contributors."""
+
+    name = "coordinate_median"
+    reduction = "stack"
+
+    def combine(self, stacked, weights, xp):
+        return _tmap(lambda s: xp.median(xp.asarray(s, xp.float32), axis=0),
+                     stacked)
+
+
+class FedAdam(AggregationStrategy):
+    """Server-side Adam (Reddi et al., "Adaptive Federated Optimization"):
+    the round's pseudo-gradient (weighted mean minus previous global) drives
+    Adam moments kept at the aggregation root; state rides with the retained
+    global-model publish so the root role can move between rounds."""
+
+    name = "fedadam"
+    stateful = True
+    needs_ref = True
+    compiled = False           # server state does not fit the pure-collective
+                               # round step; host path + facade only
+
+    def __init__(self, lr: float = 0.1, b1: float = 0.9, b2: float = 0.99,
+                 eps: float = 1e-3):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+
+    def finalize(self, mean, ref, state, xp):
+        if ref is None:
+            # first round: no pseudo-gradient yet; emit the mean, zero state
+            zeros = _tmap(lambda v: xp.zeros_like(xp.asarray(v, xp.float64)),
+                          mean)
+            return mean, {"m": zeros, "v": _tmap(xp.copy, zeros), "t": 0}
+        t = int(state["t"]) + 1 if state else 1
+        m0 = state["m"] if state else _tmap(
+            lambda v: xp.zeros_like(xp.asarray(v, xp.float64)), mean)
+        v0 = state["v"] if state else _tmap(xp.copy, m0)
+        delta = _tmap(lambda a, b: xp.asarray(a, xp.float64)
+                      - xp.asarray(b, xp.float64), mean, ref)
+        m = _tmap(lambda mm, d: self.b1 * mm + (1 - self.b1) * d, m0, delta)
+        v = _tmap(lambda vv, d: self.b2 * vv + (1 - self.b2) * d * d,
+                  v0, delta)
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+        new = _tmap(
+            lambda g, mm, vv: xp.asarray(g, xp.float64)
+            + self.lr * (mm / bc1) / (xp.sqrt(vv / bc2) + self.eps),
+            ref, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], AggregationStrategy]] = {}
+
+
+def register_strategy(name: str, factory: Callable[[], AggregationStrategy]):
+    """Register a strategy factory under ``name`` (overwrites allowed so
+    users can re-tune hyperparameters, e.g. a different fedprox mu)."""
+    _REGISTRY[name] = factory
+    return factory
+
+
+def get_strategy(s: Union[str, AggregationStrategy]) -> AggregationStrategy:
+    if isinstance(s, AggregationStrategy):
+        return s
+    try:
+        return _REGISTRY[s]()
+    except KeyError:
+        raise KeyError(f"unknown aggregation strategy {s!r}; "
+                       f"have {sorted(_REGISTRY)}") from None
+
+
+def list_strategies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register_strategy("fedavg", FedAvg)
+register_strategy("fedprox", FedProx)
+register_strategy("trimmed_mean", TrimmedMean)
+register_strategy("coordinate_median", CoordinateMedian)
+register_strategy("fedadam", FedAdam)

@@ -1,0 +1,134 @@
+"""Transport abstraction: the interface SDFLMQ actually needs from a broker.
+
+``Transport`` is the protocol extracted from SimBroker — MQTTFC, clients,
+the coordinator, and the parameter server depend on this surface only, so a
+real paho-mqtt backend (or a multi-broker bridge fabric) can slot in behind
+the same federation code.
+
+``LatencyTransport`` decorates any Transport with a per-link edge-network
+model (base delay + jitter + loss probability per publishing client):
+
+  * QoS 0 publishes are *really* dropped with probability ``drop_p`` —
+    message-loss scenarios exercise the straggler/flush machinery;
+  * QoS >= 1 publishes always arrive (at-least-once) but a drawn drop
+    counts as a retransmission and doubles that message's modeled latency;
+  * delivery stays synchronous and deterministic (the decorated broker
+    pumps immediately); latency is tracked on a virtual clock, so examples
+    and tests observe per-link/per-round timing without wall-clock sleeps.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What the control/data planes require from a message broker."""
+
+    name: str
+
+    def connect(self, client_id: str, on_message: Callable,
+                will: Optional[Any] = None) -> Any: ...
+
+    def disconnect(self, client_id: str, graceful: bool = True) -> None: ...
+
+    def subscribe(self, client_id: str, topic_filter: str,
+                  qos: int = 0) -> None: ...
+
+    def unsubscribe(self, client_id: str, topic_filter: str) -> None: ...
+
+    def publish(self, topic: str, payload: bytes, qos: int = 0,
+                retain: bool = False, sender: str = "") -> int: ...
+
+    def sys_stats(self) -> dict: ...
+
+
+@dataclass
+class LinkModel:
+    """Per-link network parameters (seconds / probability)."""
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    drop_p: float = 0.0
+
+
+@dataclass
+class _LinkStats:
+    messages: int = 0
+    dropped: int = 0
+    retransmits: int = 0
+    latency_s: float = 0.0
+    max_latency_s: float = 0.0
+
+    def observe(self, lat: float) -> None:
+        self.messages += 1
+        self.latency_s += lat
+        self.max_latency_s = max(self.max_latency_s, lat)
+
+
+class LatencyTransport:
+    """Deterministic per-link delay/jitter/drop decorator over a Transport."""
+
+    def __init__(self, inner: Transport, delay_s: float = 0.0,
+                 jitter_s: float = 0.0, drop_p: float = 0.0, seed: int = 0):
+        self.inner = inner
+        self.default = LinkModel(delay_s, jitter_s, drop_p)
+        self.links: dict[str, LinkModel] = {}
+        self.rng = random.Random(seed)
+        self.virtual_time_s = 0.0
+        self.link_stats: dict[str, _LinkStats] = {}
+
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    def set_link(self, client_id: str, delay_s: float = 0.0,
+                 jitter_s: float = 0.0, drop_p: float = 0.0) -> None:
+        self.links[client_id] = LinkModel(delay_s, jitter_s, drop_p)
+
+    # ---- Transport surface ----------------------------------------------
+    def connect(self, client_id, on_message, will=None):
+        return self.inner.connect(client_id, on_message, will=will)
+
+    def disconnect(self, client_id, graceful: bool = True):
+        return self.inner.disconnect(client_id, graceful=graceful)
+
+    def subscribe(self, client_id, topic_filter, qos: int = 0):
+        return self.inner.subscribe(client_id, topic_filter, qos=qos)
+
+    def unsubscribe(self, client_id, topic_filter):
+        return self.inner.unsubscribe(client_id, topic_filter)
+
+    def publish(self, topic: str, payload: bytes, qos: int = 0,
+                retain: bool = False, sender: str = "") -> int:
+        link = self.links.get(sender, self.default)
+        st = self.link_stats.setdefault(sender or "<anon>", _LinkStats())
+        lat = link.delay_s + self.rng.uniform(0.0, link.jitter_s)
+        if link.drop_p and self.rng.random() < link.drop_p:
+            if qos == 0:
+                st.dropped += 1
+                return -1                     # fire-and-forget: lost
+            st.retransmits += 1               # at-least-once: resend once
+            lat *= 2.0
+        st.observe(lat)
+        self.virtual_time_s += lat
+        return self.inner.publish(topic, payload, qos=qos, retain=retain,
+                                  sender=sender)
+
+    def sys_stats(self) -> dict:
+        out = dict(self.inner.sys_stats())
+        out["virtual_time_s"] = round(self.virtual_time_s, 6)
+        out["links"] = {
+            k: {"messages": s.messages, "dropped": s.dropped,
+                "retransmits": s.retransmits,
+                "mean_latency_ms": round(
+                    1e3 * s.latency_s / s.messages, 3) if s.messages else 0.0,
+                "max_latency_ms": round(1e3 * s.max_latency_s, 3)}
+            for k, s in self.link_stats.items()}
+        return out
+
+    # anything else (bridge, retained_topics, delivery_log, ...) passes
+    # through to the wrapped broker
+    def __getattr__(self, item):
+        return getattr(self.inner, item)

@@ -1,8 +1,9 @@
-"""Aggregation data plane: weighted FedAvg over an FL-client mesh axis,
-executed as compiled collectives inside the FL round step.
+"""Aggregation data plane: pluggable aggregation over an FL-client mesh
+axis, executed as compiled collectives inside the FL round step.
 
-Schedules (all mathematically identical to flat weighted FedAvg —
-property-tested against the oracle in tests/test_aggregation.py):
+The aggregation *strategy* (repro.api.strategies) decides the math; the
+*schedule* decides the collective shape.  "sum"-reduction strategies
+(fedavg, fedprox) run any schedule:
 
   * ``tree``       — paper-faithful hierarchical aggregation: one grouped
                      psum per cluster level; non-participants contribute 0.
@@ -13,19 +14,40 @@ property-tested against the oracle in tests/test_aggregation.py):
                      the DCN/pod hop where bandwidth is scarcest) with
                      local weighted combine; introduces bounded error.
 
+"stack"-reduction strategies (trimmed_mean, coordinate_median) are not
+decomposable into partial sums, so every schedule lowers to one all-gather
+over the client axis followed by a local (replicated) robust combine — the
+exact collective analogue of the host path forwarding stacked contributions
+up the MQTT tree.  Note: the combine sees every mesh row; rows carried with
+zero FedAvg weight (dead clients kept on the mesh) still contribute their
+parameters to the robust statistics — churn-exact robust aggregation lives
+on the host path.
+
 All run under shard_map; the client axis is ``axis`` ("data" in replica
 mode, "pod" in shared mode).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:      # jax < 0.6 experimental API (pinned range in pyproject)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+except ImportError:  # pragma: no cover — modern jax: top-level shard_map
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+from repro.api.strategies import AggregationStrategy, get_strategy
 from repro.core.topology import AggSchedule
 from repro.dist.compression import dequantize_int8, quantize_int8
 
@@ -82,16 +104,53 @@ def _compressed(contrib, w, axis, axis_size):
 
 
 def aggregate_params(params, weights, mesh: Mesh, axis: str,
-                     schedule: AggSchedule, param_specs):
+                     schedule: AggSchedule, param_specs,
+                     strategy: Union[str, AggregationStrategy] = "fedavg",
+                     ref_params=None):
     """params: client-stacked pytree (leading dim = n_clients, sharded over
     ``axis``); weights: (n_clients,).  Returns the same structure with every
-    client's slot holding the identical weighted global mean."""
-    axis_size = mesh.shape[axis]
+    client's slot holding the identical strategy-aggregated global.
 
-    def body(w_local, *p_leaves):
-        p_local = jax.tree_util.tree_unflatten(treedef, p_leaves)
+    ``ref_params`` (same structure as ``params``) is the pre-round model for
+    strategies with ``needs_ref`` (fedprox): each client's pre-round params
+    equal the previous global, so the reference is shard-local — no extra
+    collectives."""
+    strat = get_strategy(strategy)
+    if not strat.compiled:
+        raise ValueError(
+            f"strategy {strat.name!r} has no compiled collective form "
+            "(host path / Federation facade only)")
+    axis_size = mesh.shape[axis]
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    spec_leaves = tuple(treedef.flatten_up_to(param_specs))
+    n_p = len(p_leaves)
+    ref_leaves = ()
+    if strat.needs_ref and ref_params is not None:
+        ref_leaves = tuple(jax.tree_util.tree_leaves(ref_params))
+        assert len(ref_leaves) == n_p
+
+    def body(w_local, *leaves):
+        p_local = jax.tree_util.tree_unflatten(treedef, leaves[:n_p])
         w = w_local.reshape(())                      # this client's weight
-        contrib = _weighted(p_local, w)
+
+        if strat.reduction == "stack":
+            # robust combine needs every contribution: one all-gather, then
+            # a replicated local combine (identical result on every shard)
+            stacked = jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True),
+                p_local)
+            w_full = jax.lax.all_gather(w_local, axis, axis=0, tiled=True)
+            combined = strat.combine(stacked, w_full, jnp)
+            out = jax.tree_util.tree_map(
+                lambda m, p: m[None].astype(p.dtype), combined, p_local)
+            return tuple(jax.tree_util.tree_leaves(out))
+
+        if ref_leaves:
+            ref_local = jax.tree_util.tree_unflatten(treedef, leaves[n_p:])
+            base = strat.premap(p_local, ref_local, jnp)
+        else:
+            base = p_local
+        contrib = _weighted(base, w)
         if schedule.kind == "tree":
             summed, tw = _tree_psum(contrib, w, axis, schedule)
         elif schedule.kind == "rs_ag":
@@ -105,12 +164,9 @@ def aggregate_params(params, weights, mesh: Mesh, axis: str,
             lambda m, p: m.astype(p.dtype), mean, p_local)
         return tuple(jax.tree_util.tree_leaves(out))
 
-    p_leaves, treedef = jax.tree_util.tree_flatten(params)
-    spec_leaves = treedef.flatten_up_to(param_specs)
-    out_leaves = jax.shard_map(
+    out_leaves = shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis),) + tuple(spec_leaves),
-        out_specs=tuple(spec_leaves),
-        check_vma=False,
-    )(weights, *p_leaves)
+        in_specs=(P(axis),) + spec_leaves + (spec_leaves if ref_leaves else ()),
+        out_specs=spec_leaves,
+    )(weights, *(p_leaves + list(ref_leaves)))
     return jax.tree_util.tree_unflatten(treedef, out_leaves)

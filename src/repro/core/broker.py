@@ -93,10 +93,14 @@ class SysStats:
 
 
 class SimBroker:
-    _ids = itertools.count(1)
+    """Reference implementation of the ``repro.api.transport.Transport``
+    protocol (the surface MQTTFC, clients, and the coordinator depend on)."""
 
     def __init__(self, name: str = "broker0"):
         self.name = name
+        # per-instance message-id counter: QoS-1 dedup and delivery logs are
+        # isolated between brokers and deterministic across runs
+        self._ids = itertools.count(1)
         self._clients: dict[str, _ClientSession] = {}
         self._retained: dict[str, Message] = {}
         self._queue: deque = deque()
@@ -139,7 +143,11 @@ class SimBroker:
 
     # ---- publishing ------------------------------------------------------
     def publish(self, topic: str, payload: bytes, qos: int = 0,
-                retain: bool = False, _origin: str = "") -> int:
+                retain: bool = False, sender: str = "",
+                _origin: str = "") -> int:
+        """``sender`` (the publishing client id) is accepted for Transport
+        compatibility; decorators like LatencyTransport key per-link network
+        models on it.  The sim broker itself only routes on the topic."""
         mid = next(self._ids)
         msg = Message(topic, payload, qos, retain, mid,
                       _origin or self.name)

@@ -2,16 +2,23 @@
 
 A client holds: a Role Arbiter (duties + topic subscriptions), a Model
 Controller (per-session model repository), and the aggregation service.
-The host-side FedAvg path moves *weighted partial sums* up the cluster tree
-through MQTTFC — mathematically identical to flat FedAvg (property-tested).
-A trainer publishes its raw model into its leaf cluster's topic; cluster
-heads (which subscribe to their own topic, so their own model self-delivers)
-accumulate ``expected`` inputs and forward the partial sum to the parent
-cluster; the root divides once and publishes the global model (retained).
+The aggregation semantics are pluggable (repro.api.strategies): sessions
+carry a strategy name, and every aggregator applies the same strategy hooks
+the compiled collective path uses (core/aggregation.py).
 
-In the TPU deployment the same tree is executed as compiled collectives
-(core/aggregation.py); this class is the paper-faithful path used by the
-examples and the paper-replication benchmarks.
+"sum"-reduction strategies (fedavg, fedprox, fedadam) move *weighted
+partial sums* up the cluster tree through MQTTFC — mathematically identical
+to flat aggregation (property-tested).  A trainer publishes its raw model
+into its leaf cluster's topic; cluster heads (which subscribe to their own
+topic, so their own model self-delivers) accumulate ``expected`` inputs and
+forward the partial sum to the parent cluster; the root finalizes once and
+publishes the global model (retained).
+
+"stack"-reduction strategies (trimmed_mean, coordinate_median) are not
+decomposable into partial sums, so heads forward their collected
+contributions unchanged; the root stacks everything and applies the robust
+combine — permutation-invariant, hence bit-identical to the flat reference
+no matter the tree shape.
 """
 from __future__ import annotations
 
@@ -20,8 +27,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.api.strategies import (AggregationStrategy, get_strategy,
+                                  register_strategy)
 from repro.core import topics as T
-from repro.core.broker import SimBroker
 from repro.core.mqttfc import MQTTFC, raw_handler
 from repro.core.roles import ClientAssignment, RoleArbiter
 from repro.core.stats import ClientStats, local_stats
@@ -39,10 +47,16 @@ def weighted_add(acc: Optional[Params], p: Params, w: float) -> Params:
 
 @dataclass
 class _Accumulator:
-    acc: Optional[Params] = None
+    acc: Optional[Params] = None             # sum reduction: weighted sums
+    entries: list = field(default_factory=list)   # stack reduction: raw
     weight: float = 0.0
     received: int = 0
     flushed: bool = False
+
+    def restart(self) -> None:
+        self.acc, self.weight, self.received = None, 0.0, 0
+        self.entries = []
+        self.flushed = False
 
 
 @dataclass
@@ -51,6 +65,9 @@ class _SessionCtx:
     model_name: str
     params: Optional[Params] = None
     weight: float = 1.0                      # FedAvg weight (sample count)
+    strategy: str = "fedavg"                 # session-wide (from topology)
+    global_params: Optional[Params] = None   # last global (strategy ref)
+    server_state: Optional[dict] = None      # stateful strategies (fedadam)
     global_version: int = 0
     round_idx: int = 0
     accs: dict[str, _Accumulator] = field(default_factory=dict)
@@ -82,9 +99,10 @@ class ModelController:
 
 
 class SDFLMQClient:
-    """Mirrors the paper's SDFLMQ_Client (Listing 1)."""
+    """Mirrors the paper's SDFLMQ_Client (Listing 1).  ``broker`` is any
+    repro.api.transport.Transport implementation."""
 
-    def __init__(self, client_id: str, broker: SimBroker,
+    def __init__(self, client_id: str, broker,
                  preferred_role: str = "trainer",
                  stats: Optional[ClientStats] = None):
         self.client_id = client_id
@@ -106,14 +124,27 @@ class SDFLMQClient:
                           session_capacity_max: int,
                           session_time_s: float = 3600.0,
                           waiting_time_s: float = 120.0,
-                          preferred_role: Optional[str] = None) -> None:
-        self.models.ensure(session_id, model_name)
+                          preferred_role: Optional[str] = None,
+                          strategy: str = "fedavg") -> None:
+        strat = get_strategy(strategy)           # fail fast on unknown names
+        if isinstance(strategy, str):
+            strategy = strat.name
+        else:
+            # tuned instance: register under a session-scoped name so every
+            # aggregator applies the same hyperparameters without touching
+            # what the plain name resolves to for other sessions (a real
+            # deployment registers the same factory on every node; the wire
+            # carries the name)
+            strategy = f"{strat.name}@{session_id}"
+            register_strategy(strategy, lambda s=strat: s)
+        ctx = self.models.ensure(session_id, model_name)
+        ctx.strategy = strategy
         self._subscribe_session(session_id)
         self.fc.call(T.coord("create_session"), session_id, model_name,
                      self.client_id, fl_rounds, session_capacity_min,
                      session_capacity_max, session_time_s, waiting_time_s,
                      preferred_role or self.preferred_role,
-                     self.stats.to_dict())
+                     self.stats.to_dict(), strategy=strategy)
 
     def join_fl_session(self, session_id: str, model_name: str,
                         fl_rounds: int = 0,
@@ -193,6 +224,8 @@ class SDFLMQClient:
         ev = body.get("event")
         if ev == "topology":
             ctx.tree = body.get("tree")
+            # session-wide strategy rides the retained topology broadcast
+            ctx.strategy = body.get("strategy", ctx.strategy)
         elif ev == "round_start":
             ctx.reset_round(body.get("round", ctx.round_idx))
             if self.on_round_start:
@@ -206,8 +239,13 @@ class SDFLMQClient:
         elif ev == "session_terminated":
             ctx.terminated = True
 
+    def _strategy_for(self, ctx: _SessionCtx) -> AggregationStrategy:
+        return get_strategy(ctx.strategy)
+
     def _on_cluster_input(self, topic: str, payload) -> None:
-        """Aggregation service: accumulate weighted inputs for one duty."""
+        """Aggregation service: accumulate inputs for one duty under the
+        session's strategy (weighted partial sums, or stacked raw
+        contributions for robust strategies)."""
         body = _body(payload)
         parts = topic.split("/")       # sdflmq/session/<sid>/cluster/<cid>/agg
         sid, cluster_id = parts[2], parts[4]
@@ -215,12 +253,22 @@ class SDFLMQClient:
         duty = self.arbiter.duty_for(cluster_id)
         if ctx is None or duty is None:
             return
+        strat = self._strategy_for(ctx)
         a = ctx.acc_for(cluster_id)
         if a.flushed:        # new aggregation cycle starts on first input
-            a.acc, a.weight, a.received, a.flushed = None, 0.0, 0, False
+            a.restart()
         w = float(body["weight"])
-        scale = 1.0 if body.get("partial") else w
-        a.acc = weighted_add(a.acc, body["params"], scale)
+        if strat.reduction == "stack":
+            if body.get("partial"):
+                a.entries.extend(body["entries"])
+            else:
+                a.entries.append({"params": body["params"], "weight": w})
+        else:
+            if body.get("partial"):
+                a.acc = weighted_add(a.acc, body["params"], 1.0)
+            else:
+                contrib = strat.premap(body["params"], ctx.global_params, np)
+                a.acc = weighted_add(a.acc, contrib, w)
         a.weight += w
         a.received += 1
         ctx.peak_acc_bytes = max(ctx.peak_acc_bytes, _acc_bytes(ctx))
@@ -231,22 +279,46 @@ class SDFLMQClient:
         ctx = self.models.get(session_id)
         duty = self.arbiter.duty_for(cluster_id)
         a = ctx.accs.get(cluster_id)
-        if duty is None or a is None or a.acc is None or a.flushed:
+        if duty is None or a is None or a.flushed \
+                or (a.acc is None and not a.entries):
             return
         if not force and a.received < duty.expected:
             return
+        strat = self._strategy_for(ctx)
         if duty.parent is not None:
-            self.fc.call(T.cluster_agg(session_id, duty.parent),
-                         {"params": a.acc, "weight": a.weight,
-                          "sender": self.client_id, "partial": True})
+            if strat.reduction == "stack":
+                payload = {"entries": a.entries, "weight": a.weight,
+                           "sender": self.client_id, "partial": True}
+            else:
+                payload = {"params": a.acc, "weight": a.weight,
+                           "sender": self.client_id, "partial": True}
+            self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
         else:
-            glob = {k: (v / a.weight).astype(np.float32)
-                    for k, v in a.acc.items()}
-            self.fc.call(T.global_model(session_id),
-                         {"params": glob, "version": ctx.global_version + 1,
-                          "round": ctx.round_idx}, retain=True)
+            glob, new_state = self._finalize_root(ctx, strat, a)
+            msg = {"params": glob, "version": ctx.global_version + 1,
+                   "round": ctx.round_idx}
+            if new_state is not None:
+                # server-optimizer state rides the retained global publish,
+                # so whichever client roots the next round resumes it
+                msg["server_state"] = new_state
+            self.fc.call(T.global_model(session_id), msg, retain=True)
+        a.restart()
         a.flushed = True
-        a.acc, a.weight, a.received = None, 0.0, 0
+
+    def _finalize_root(self, ctx: _SessionCtx, strat: AggregationStrategy,
+                       a: _Accumulator):
+        """Root aggregator: collected inputs -> (global float32, state)."""
+        if strat.reduction == "stack":
+            stacked = {k: np.stack([np.asarray(e["params"][k])
+                                    for e in a.entries])
+                       for k in a.entries[0]["params"]}
+            weights = np.asarray([e["weight"] for e in a.entries], np.float64)
+            glob = strat.combine(stacked, weights, np)
+            return {k: np.asarray(v, np.float32) for k, v in glob.items()}, None
+        mean = {k: v / a.weight for k, v in a.acc.items()}
+        glob, new_state = strat.finalize(mean, ctx.global_params,
+                                         ctx.server_state, np)
+        return {k: np.asarray(v, np.float32) for k, v in glob.items()}, new_state
 
     def _on_global(self, topic: str, payload) -> None:
         body = _body(payload)
@@ -255,6 +327,12 @@ class SDFLMQClient:
         if ctx is None:
             return
         ctx.params = {k: np.asarray(v) for k, v in body["params"].items()}
+        strat = self._strategy_for(ctx)
+        if strat.needs_ref or strat.stateful:
+            # only reference-using strategies pay for a retained global copy
+            ctx.global_params = {k: np.array(v) for k, v in ctx.params.items()}
+        if "server_state" in body:
+            ctx.server_state = body["server_state"]
         ctx.global_version = body.get("version", ctx.global_version + 1)
         if self.on_global_update:
             self.on_global_update(sid, ctx.params, ctx.global_version)
@@ -272,6 +350,8 @@ def _acc_bytes(ctx: _SessionCtx) -> int:
     for a in ctx.accs.values():
         if a.acc is not None:
             total += sum(v.nbytes for v in a.acc.values())
+        for e in a.entries:
+            total += sum(np.asarray(v).nbytes for v in e["params"].values())
     return total
 
 

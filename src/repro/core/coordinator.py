@@ -8,12 +8,10 @@ assignments, cluster topology), exactly as in the paper.  Role
 """
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core import topics as T
-from repro.core.broker import SimBroker
 from repro.core.clustering import ClusterTree, build_tree, validate_tree
 from repro.core.mqttfc import MQTTFC
 from repro.core.role_optimizer import get_policy
@@ -31,8 +29,9 @@ class CoordinatorConfig:
 
 
 class Coordinator:
-    def __init__(self, broker: SimBroker, cfg: Optional[CoordinatorConfig] = None,
+    def __init__(self, broker, cfg: Optional[CoordinatorConfig] = None,
                  client_id: str = "coordinator"):
+        # ``broker`` is any repro.api.transport.Transport implementation
         self.cfg = cfg or CoordinatorConfig()
         self.fc = MQTTFC(broker, client_id)
         self.sessions: dict[str, FLSession] = {}
@@ -57,13 +56,14 @@ class Coordinator:
                         session_time_s: float = 3600.0,
                         waiting_time_s: float = 120.0,
                         preferred_role: str = "aggregator",
-                        stats: Optional[dict] = None) -> None:
+                        stats: Optional[dict] = None,
+                        strategy: str = "fedavg") -> None:
         if session_id in self.sessions:
             # paper: first create wins; later requests are dumped
             return
         s = FLSession(session_id, model_name, creator, fl_rounds,
                       capacity_min, capacity_max, session_time_s,
-                      waiting_time_s,
+                      waiting_time_s, strategy=strategy,
                       round_deadline_s=self.cfg.round_deadline_s)
         self.sessions[session_id] = s
         st = ClientStats.from_dict(stats) if stats else ClientStats(creator)
@@ -180,9 +180,12 @@ class Coordinator:
                 self.rearrangement_messages += 1
             else:
                 self.arrangement_messages += 1
-        # publish the topology on the session topic (paper Fig. 5a)
+        # publish the topology on the session topic (paper Fig. 5a); the
+        # session's aggregation strategy rides along (retained), so late
+        # joiners and every aggregator agree on the reduction semantics
         self.fc.call(T.session_status(session_id),
                      {"event": "topology", "tree": tree.describe(),
+                      "strategy": s.strategy,
                       "round": s.round_idx}, retain=True)
         for cid, st in s.contributors.items():
             if cid in new_assign and new_assign[cid].duties:

@@ -141,11 +141,20 @@ def abstract_state(cfg: ArchConfig, mesh: Mesh, opt_name: str):
 
 def build_fl_round_step(cfg: ArchConfig, mesh: Mesh, schedule: AggSchedule,
                         total_steps: int = 10000,
-                        local_steps: Optional[int] = None):
+                        local_steps: Optional[int] = None,
+                        strategy: str = "fedavg"):
     """Returns fl_round_step(state, batch, weights) -> (state, metrics).
 
     batch: client-stacked when n_clients>1 (leading dim = clients);
-    weights: (n_clients,) FedAvg weights (sample counts)."""
+    weights: (n_clients,) FedAvg weights (sample counts); ``strategy`` is
+    any compiled-capable aggregation strategy name (repro.api.strategies) —
+    the same registry the host MQTT path consumes."""
+    from repro.api.strategies import get_strategy
+    strat = get_strategy(strategy)
+    if not strat.compiled:
+        raise ValueError(
+            f"strategy {strat.name!r} has no compiled collective form "
+            "(host path / Federation facade only)")
     model = model_api.get_model(cfg)
     opt = make_optimizer(cfg, total_steps=total_steps)
     n = n_clients_for(cfg, mesh)
@@ -172,8 +181,12 @@ def build_fl_round_step(cfg: ArchConfig, mesh: Mesh, schedule: AggSchedule,
             params, opt_state, losses = jax.vmap(
                 client_fn, in_axes=(0, 0, None, 0))(
                     state["params"], state["opt"], state["step"], batch)
+            # pre-round params double as the previous global (every client
+            # starts a round from the identical aggregated model)
+            ref = state["params"] if strat.needs_ref else None
             params = aggregate_params(params, weights, mesh, ax,
-                                      schedule, pspecs)
+                                      schedule, pspecs, strategy=strat,
+                                      ref_params=ref)
             loss = jnp.mean(losses)
         else:
             params, opt_state, loss = client_fn(

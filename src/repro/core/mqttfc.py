@@ -23,7 +23,12 @@ try:
 except Exception:  # pragma: no cover
     _zstd = None
 
-from repro.core.broker import Message, SimBroker
+from typing import TYPE_CHECKING
+
+from repro.core.broker import Message
+
+if TYPE_CHECKING:  # protocol import for typing only (no runtime cycle)
+    from repro.api.transport import Transport
 
 _NUMPY_EXT = 42
 
@@ -84,11 +89,11 @@ class _Reassembly:
 
 
 class MQTTFC:
-    """Per-client fleet-control endpoint."""
+    """Per-client fleet-control endpoint.  ``broker`` is any object
+    implementing the ``repro.api.transport.Transport`` protocol (the sim
+    broker, a LatencyTransport decorator, a real MQTT backend, ...)."""
 
-    _call_ids = itertools.count(1)
-
-    def __init__(self, broker: SimBroker, client_id: str,
+    def __init__(self, broker: "Transport", client_id: str,
                  max_batch_bytes: int = 64 * 1024,
                  codec: str = "zlib",
                  compress_threshold: int = 4 * 1024,
@@ -96,6 +101,7 @@ class MQTTFC:
                  will_payload: bytes = b""):
         self.broker = broker
         self.client_id = client_id
+        self._call_ids = itertools.count(1)   # per-endpoint: deterministic
         self.max_batch_bytes = max_batch_bytes
         self.codec = codec
         self.compress_threshold = compress_threshold
@@ -147,7 +153,8 @@ class MQTTFC:
             frame = len(header).to_bytes(4, "big") + header + chunk
             self.parts_sent += 1
             self.bytes_sent += len(frame)
-            self.broker.publish(topic, frame, qos=qos, retain=retain)
+            self.broker.publish(topic, frame, qos=qos, retain=retain,
+                                sender=self.client_id)
 
     # ---- dispatch --------------------------------------------------------
     def _on_message(self, msg: Message) -> None:

@@ -30,6 +30,7 @@ class FLSession:
     capacity_max: int
     session_time_s: float = 3600.0
     waiting_time_s: float = 120.0
+    strategy: str = "fedavg"           # aggregation strategy (repro.api)
     state: SessionState = SessionState.CREATED
     round_idx: int = 0
     contributors: dict[str, ClientStats] = field(default_factory=dict)
@@ -87,6 +88,6 @@ class FLSession:
         return {
             "session_id": self.session_id, "model_name": self.model_name,
             "state": self.state.value, "round": self.round_idx,
-            "fl_rounds": self.fl_rounds,
+            "fl_rounds": self.fl_rounds, "strategy": self.strategy,
             "contributors": sorted(self.contributors),
         }

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical-axis sharding declarations, wire/collective
+compression, and MoE expert-parallel dispatch variants."""

@@ -1,0 +1,33 @@
+"""Collective/wire compression: int8 block quantization with per-row
+(last-dim) absmax scales, plus the error-feedback variant that keeps the
+quantization residual bounded across rounds (used on the DCN/pod hop where
+bandwidth is scarcest; see core/aggregation.py "compressed" schedule)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """x -> (q int8, scale f32).  Scales are per last-dim row (keepdims), so
+    ``q * scale`` broadcasts back to x's shape.  Max error <= absmax/127."""
+    xf = jnp.asarray(x).astype(jnp.float32)
+    if xf.ndim == 0:
+        xf = xf.reshape(1)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_with_error_feedback(x, err):
+    """Quantize ``x + err`` and carry the new residual forward.  The
+    residual never exceeds one quantization step (absmax/127), so repeated
+    compressed rounds do not drift."""
+    t = jnp.asarray(x).astype(jnp.float32) + err
+    q, scale = quantize_int8(t)
+    new_err = t - dequantize_int8(q, scale)
+    return q, scale, new_err

@@ -1,0 +1,48 @@
+"""MoE parallelism variants selected by ``cfg.moe.impl``.
+
+Both share the capacity-dispatch math in ``models/moe.moe_apply_dense`` and
+differ only in the sharding constraints pinned on the dispatch buffers, so
+they are numerically interchangeable with the auto path (property-tested in
+scripts/smoke_moe_a2a.py):
+
+  * ``ep_a2a``   — expert parallelism: the (E, cap, D) dispatch buffer is
+                   sharded over ``model`` on the experts dim, which lowers
+                   the token dispatch/return into all-to-all style
+                   collectives instead of replicated compute.
+  * ``tp_local`` — intra-expert tensor parallelism: experts replicated, the
+                   (E, cap, F) expert activations sharded over ``model`` on
+                   the d_ff dim (Mixtral-style few-big-experts).
+
+Constraints are applied only when a mesh context is active and the dim
+divides the ``model`` axis; otherwise the math silently runs unconstrained
+(single-device tests).
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.moe import moe_apply_dense
+
+
+def _model_axis_size():
+    """Size of the ``model`` axis in the active mesh context (0 if none)."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or "model" not in mesh.shape:
+        return 0
+    return int(mesh.shape["model"])
+
+
+def moe_apply_a2a(cfg: ArchConfig, p, x):
+    m = cfg.moe
+    ax = _model_axis_size()
+    buf = P("model", None, None) if ax and m.n_experts % ax == 0 else None
+    return moe_apply_dense(cfg, p, x, buf_constraint=buf)
+
+
+def moe_apply_tp_local(cfg: ArchConfig, p, x):
+    m = cfg.moe
+    ax = _model_axis_size()
+    act = P(None, None, "model") if ax and m.d_ff_expert % ax == 0 else None
+    return moe_apply_dense(cfg, p, x, act_constraint=act)

@@ -1,0 +1,174 @@
+"""Logical-axis parameter declarations and the sharding resolver.
+
+Models declare parameters as ``decl(shape, logical_axes)`` pytrees instead of
+concrete arrays; one resolver maps logical axes ("embed", "heads", "mlp",
+"experts", ...) onto mesh axes per FL deployment mode:
+
+  * ``replica`` — one FL client per ``data``-axis row; each client's params
+    are replicated across ``data`` (the leading "clients" axis does the
+    splitting) and tensor-parallel over ``model``.
+  * ``shared``  — FSDP: the embed dim shards over ``data``, TP over
+    ``model``; one FL client per ``pod``.
+
+Resolution is divisibility-aware and claims each mesh axis at most once per
+tensor, scanning dims left to right.  This is what makes MoE parallelism
+automatic: Kimi-K2's 384 experts divide ``model``=16, so "experts" claims
+the axis (expert parallelism) and "expert_mlp" replicates; Mixtral's 8
+experts do not divide 16, so "experts" falls through and "expert_mlp"
+claims ``model`` (intra-expert tensor parallelism).
+
+Stacked axes ("layers" from ``stack``, "clients" from ``prepend_axis``) are
+excluded from fan-in when initializing, so a stacked layer initializes
+exactly like an unstacked one.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Leading axes added by stack()/prepend_axis(): not part of a weight's
+# mathematical shape, excluded from fan-in.
+_STACK_AXES = ("layers", "clients")
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    """One declared parameter: shape + logical axis names + init recipe."""
+    shape: tuple
+    axes: tuple
+    init: str = "normal"        # normal | embed | zeros | ones | neg_ones | const
+    dtype: Any = jnp.bfloat16
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+def decl(shape, axes, init: str = "normal", dtype=jnp.bfloat16,
+         scale: float = 1.0) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), init, dtype, float(scale))
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _map_decls(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_decl)
+
+
+def stack(tree, n: int):
+    """Prepend a scan-over-layers dim to every decl in the tree."""
+    return prepend_axis(tree, n, "layers")
+
+
+def prepend_axis(tree, n: int, name: str):
+    """Prepend a named leading dim (e.g. "clients") to every decl."""
+    return _map_decls(
+        lambda d: ParamDecl((n,) + d.shape, (name,) + d.axes,
+                            d.init, d.dtype, d.scale), tree)
+
+
+def param_count(tree) -> int:
+    return sum(d.size for d in
+               jax.tree_util.tree_leaves(tree, is_leaf=is_decl))
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+def _fan_in(d: ParamDecl) -> int:
+    """Product of contracting dims: everything but the last, excluding
+    stacked leading axes."""
+    f = 1
+    for dim, ax in zip(d.shape[:-1], d.axes[:-1]):
+        if ax not in _STACK_AXES:
+            f *= dim
+    return max(f, 1)
+
+
+def _init_leaf(d: ParamDecl, key):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "neg_ones":
+        return jnp.full(d.shape, -1, d.dtype)
+    if d.init == "const":
+        return jnp.full(d.shape, d.scale, d.dtype)
+    if d.init == "embed":
+        std = 0.02 * d.scale
+    elif d.init == "normal":
+        std = d.scale / math.sqrt(_fan_in(d))
+    else:
+        raise ValueError(f"unknown init {d.init!r}")
+    x = jax.random.normal(key, d.shape, jnp.float32) * std
+    return x.astype(d.dtype)
+
+
+def materialize(tree, key):
+    """Concrete arrays for a decl tree (deterministic: per-leaf fold_in)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_decl)
+    out = [_init_leaf(d, jax.random.fold_in(key, i))
+           for i, d in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct stand-ins (dry-run lowering: no allocation)."""
+    return _map_decls(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+# --------------------------------------------------------------------------
+# Logical-axis resolution
+# --------------------------------------------------------------------------
+
+def rules_for(mode: str) -> dict:
+    """Logical axis -> mesh axis for an FL deployment mode.  The caller may
+    override entries (fl_step sets rules["clients"])."""
+    common = {
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "mlp": "model", "experts": "model", "expert_mlp": "model",
+        "layers": None, "clients": None,
+        "batch": "data", "cache_seq": "model",
+    }
+    if mode == "shared":      # FSDP over data + TP over model
+        return {**common, "embed": "data", "embed_tp": "data"}
+    if mode == "replica":     # per-client replicas; TP over model only
+        return {**common, "embed": None, "embed_tp": None}
+    raise ValueError(f"unknown FL mode {mode!r}")
+
+
+def _spec_for(d: ParamDecl, rules: dict, mesh: Mesh) -> P:
+    used: set = set()
+    parts = []
+    for dim, ax in zip(d.shape, d.axes):
+        m = rules.get(ax) if ax is not None else None
+        if (m is not None and m in mesh.shape and m not in used
+                and dim >= mesh.shape[m] and dim % mesh.shape[m] == 0):
+            parts.append(m)
+            used.add(m)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def specs_for(tree, rules: dict, mesh: Mesh):
+    """PartitionSpec tree for a decl tree under the given rules/mesh."""
+    return _map_decls(lambda d: _spec_for(d, rules, mesh), tree)
+
+
+def shardings_for(tree, rules: dict, mesh: Mesh):
+    """NamedSharding tree (usable as jit out_shardings)."""
+    return _map_decls(
+        lambda d: NamedSharding(mesh, _spec_for(d, rules, mesh)), tree)

@@ -28,13 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.federation import Federation
 from repro.configs.base import ShapeConfig, get_arch, smoke_config
 from repro.ckpt.manager import CheckpointManager
-from repro.core.broker import SimBroker
-from repro.core.client import SDFLMQClient
-from repro.core.coordinator import Coordinator, CoordinatorConfig
 from repro.core.fl_step import build_fl_round_step, init_state, n_clients_for
-from repro.core.parameter_server import ParameterServer
 from repro.core.stats import StatsSimulator
 from repro.core.topology import compile_tree, flat_schedule
 from repro.data.federated import FederatedTokens
@@ -46,34 +43,34 @@ class SDFLMQTrainer:
     def __init__(self, cfg, mesh, n_clients: int, rounds: int,
                  batch_per_client: int, seq: int, ckpt_dir: str | None = None,
                  schedule_kind: str = "tree", seed: int = 0,
-                 failure_plan: FailurePlan | None = None):
+                 failure_plan: FailurePlan | None = None,
+                 strategy: str = "fedavg"):
         self.cfg, self.mesh, self.rounds = cfg, mesh, rounds
         self.n = n_clients
         self.batch_per_client, self.seq = batch_per_client, seq
         self.schedule_kind = schedule_kind
+        self.strategy = strategy
         self.failures = failure_plan or FailurePlan()
 
-        # ---- control plane -------------------------------------------
-        self.broker = SimBroker()
-        self.coord = Coordinator(self.broker, CoordinatorConfig(
-            role_policy=cfg.fl.role_policy,
-            aggregator_ratio=cfg.fl.aggregator_ratio, levels=cfg.fl.levels))
-        self.ps = ParameterServer(self.broker)
+        # ---- control plane (via the repro.api facade) ----------------
+        self.fed = Federation(role_policy=cfg.fl.role_policy,
+                              aggregator_ratio=cfg.fl.aggregator_ratio,
+                              levels=cfg.fl.levels)
+        self.broker = self.fed.transport
+        self.coord = self.fed.coordinator
+        self.ps = self.fed.param_server
         self.sim = StatsSimulator([f"c{i}" for i in range(n_clients)],
                                   seed=seed)
-        self.clients = {}
         sid = self.sid = "train_session"
-        for i in range(n_clients):
-            cid = f"c{i}"
-            cl = SDFLMQClient(cid, self.broker,
-                              preferred_role="aggregator" if i % 3 == 0
-                              else "trainer", stats=self.sim.sample(cid, 0))
-            self.clients[cid] = cl
-        first = self.clients["c0"]
-        first.create_fl_session(sid, cfg.name, rounds, n_clients, n_clients)
-        for i in range(1, n_clients):
-            self.clients[f"c{i}"].join_fl_session(sid, cfg.name, rounds)
-        assert self.coord.sessions[sid].state.value == "running"
+        members = [self.fed.client(f"c{i}",
+                                   preferred_role="aggregator" if i % 3 == 0
+                                   else "trainer",
+                                   stats=self.sim.sample(f"c{i}", 0))
+                   for i in range(n_clients)]
+        self.session = self.fed.create_session(
+            sid, cfg.name, rounds, participants=members, strategy=strategy)
+        self.clients = self.session.participants
+        assert self.session.state == "running"
 
         # ---- data plane ----------------------------------------------
         self.data = FederatedTokens(cfg.vocab, n_clients, seed=seed)
@@ -104,7 +101,8 @@ class SDFLMQTrainer:
         key = schedule.signature()
         if key not in self._compiled:
             self._compiled[key] = jax.jit(
-                build_fl_round_step(self.cfg, self.mesh, schedule))
+                build_fl_round_step(self.cfg, self.mesh, schedule,
+                                    strategy=self.strategy))
         return self._compiled[key]
 
     def run(self) -> list[dict]:
@@ -118,7 +116,7 @@ class SDFLMQTrainer:
             # client's mesh row gets zero FedAvg weight (sums unaffected)
             for dead in self.failures.fail_at.get(r, []):
                 if dead in self.clients:
-                    self.clients.pop(dead).fail()
+                    self.session.fail(dead)
                     weights_np[int(dead[1:])] = 0.0
             schedule = self._schedule()
             step = self._step_for(schedule)
@@ -158,6 +156,8 @@ def main():
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--schedule", default="tree",
                     choices=["tree", "flat", "rs_ag"])
+    ap.add_argument("--strategy", default="fedavg",
+                    help="aggregation strategy (repro.api.strategies)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data-mesh", type=int, default=0,
                     help="data axis size (0 = #clients)")
@@ -180,7 +180,8 @@ def main():
     trainer = SDFLMQTrainer(cfg, mesh, args.clients, args.rounds,
                             args.batch_per_client, args.seq,
                             ckpt_dir=args.ckpt_dir,
-                            schedule_kind=args.schedule)
+                            schedule_kind=args.schedule,
+                            strategy=args.strategy)
     for m in trainer.run():
         print(f"round {m['round']:3d} loss {m['loss']:.4f} "
               f"{m['time_s']:.2f}s sched={m['schedule']} "

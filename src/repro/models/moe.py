@@ -62,6 +62,15 @@ def moe_apply(cfg: ArchConfig, p, x):
     if m.impl == "tp_local":
         from repro.dist.moe_a2a import moe_apply_tp_local
         return moe_apply_tp_local(cfg, p, x)
+    return moe_apply_dense(cfg, p, x)
+
+
+def moe_apply_dense(cfg: ArchConfig, p, x, buf_constraint=None,
+                    act_constraint=None):
+    """Capacity-dispatch einsum path.  ``buf_constraint``/``act_constraint``
+    optionally pin the dispatch buffer (E, cap, D) / expert activations
+    (E, cap, F) shardings (see repro/dist/moe_a2a.py)."""
+    m = cfg.moe
     B, S, D = x.shape
     T = B * S
     E, K = m.n_experts, m.top_k
@@ -84,9 +93,13 @@ def moe_apply(cfg: ArchConfig, p, x):
 
     buf = jnp.zeros((E * cap, D), x.dtype).at[slot].set(xf[stok], mode="drop")
     h = buf.reshape(E, cap, D)
+    if buf_constraint is not None:
+        h = jax.lax.with_sharding_constraint(h, buf_constraint)
     g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
     up = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
     act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+    if act_constraint is not None:
+        act = jax.lax.with_sharding_constraint(act, act_constraint)
     out = jnp.einsum("ecf,efd->ecd", act, p["w_down"]).reshape(E * cap, D)
 
     gathered = out[jnp.clip(slot, 0, E * cap - 1)]

@@ -1,0 +1,319 @@
+"""repro.api tests: the Federation facade (elastic membership, LWT failures,
+callbacks), the aggregation-strategy registry (tree == flat equivalence for
+every strategy, fedavg bit-identity with the legacy accumulator math), and
+the Transport abstraction (protocol conformance, per-link latency/drop)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (Federation, LatencyTransport, Transport, get_strategy,
+                       list_strategies)
+from repro.core.broker import Message, SimBroker
+
+
+def make_session(n, strategy="fedavg", levels=3, ratio=0.4, rounds=3,
+                 capacity=None, **fed_kw):
+    fed = Federation(aggregator_ratio=ratio, levels=levels, **fed_kw)
+    clients = [fed.client(f"c{i}",
+                          preferred_role="aggregator" if i % 2 else "trainer")
+               for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients, strategy=strategy,
+                                 capacity=capacity)
+    return fed, session
+
+
+def flat_reference(strategy, params, weights, ref=None):
+    """Oracle: the strategy applied to the flat (non-tree) client set."""
+    strat = get_strategy(strategy)
+    cids = sorted(params)
+    if strat.reduction == "stack":
+        stacked = {k: np.stack([np.asarray(params[c][k]) for c in cids])
+                   for k in params[cids[0]]}
+        wv = np.asarray([weights[c] for c in cids], np.float64)
+        out = strat.combine(stacked, wv, np)
+        return {k: np.asarray(v, np.float32) for k, v in out.items()}
+    acc, tw = None, 0.0
+    for c in cids:
+        contrib = strat.premap(params[c], ref, np)
+        w = weights[c]
+        if acc is None:
+            acc = {k: np.asarray(v, np.float64) * w for k, v in contrib.items()}
+        else:
+            for k, v in contrib.items():
+                acc[k] = acc[k] + np.asarray(v, np.float64) * w
+        tw += w
+    mean = {k: v / tw for k, v in acc.items()}
+    out, _ = strat.finalize(mean, ref, None, np)
+    return {k: np.asarray(v, np.float32) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Strategy equivalence: cluster tree == flat reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["fedavg", "fedprox", "trimmed_mean",
+                                      "coordinate_median", "fedadam"])
+@pytest.mark.parametrize("n,levels,ratio", [(5, 3, 0.4), (9, 3, 0.3),
+                                            (16, 4, 0.25)])
+def test_strategy_tree_equals_flat(strategy, n, levels, ratio):
+    fed, session = make_session(n, strategy, levels, ratio, rounds=1)
+    rng = np.random.default_rng(n * 7 + levels)
+    params = {f"c{i}": {"w": rng.normal(size=(6, 3)).astype(np.float32),
+                        "b": rng.normal(size=(4,)).astype(np.float32)}
+              for i in range(n)}
+    weights = {f"c{i}": float(rng.integers(1, 9)) for i in range(n)}
+    session.run_round(lambda cid, g, r: (params[cid], int(weights[cid])))
+    got = session.global_params()
+    want = flat_reference(strategy, params, weights)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 14), seed=st.integers(0, 200),
+       strategy=st.sampled_from(["trimmed_mean", "coordinate_median"]))
+def test_property_robust_strategies_tree_equals_flat(n, seed, strategy):
+    """Robust combines are permutation-invariant, so the tree result must be
+    bit-identical to the flat stacked reference for any topology."""
+    rng = np.random.default_rng(seed)
+    levels = int(rng.integers(2, 5))
+    ratio = float(rng.uniform(0.2, 0.6))
+    fed, session = make_session(n, strategy, levels, ratio, rounds=1)
+    params = {f"c{i}": {"w": rng.normal(size=(5,)).astype(np.float32)}
+              for i in range(n)}
+    weights = {f"c{i}": float(rng.uniform(0.5, 5.0)) for i in range(n)}
+    session.run_round(lambda cid, g, r: (params[cid], int(weights[cid]) or 1))
+    got = session.global_params()["w"]
+    strat = get_strategy(strategy)
+    stacked = np.stack([params[f"c{i}"]["w"] for i in range(n)])
+    want = strat.combine({"w": stacked}, None, np)["w"]
+    np.testing.assert_array_equal(got, np.asarray(want, np.float32))
+
+
+def test_fedavg_bit_identical_to_legacy_accumulator():
+    """The strategy-based path must reproduce the pre-refactor float64
+    weighted-sum math bit for bit."""
+    n = 7
+    fed, session = make_session(n, "fedavg", rounds=1)
+    rng = np.random.default_rng(0)
+    params = {f"c{i}": {"w": rng.normal(size=(8, 2)).astype(np.float32)}
+              for i in range(n)}
+    weights = {f"c{i}": float(rng.integers(1, 30)) for i in range(n)}
+    session.run_round(lambda cid, g, r: (params[cid], int(weights[cid])))
+    got = session.global_params()["w"]
+    acc = None
+    for c in sorted(params):
+        acc = (np.asarray(params[c]["w"], np.float64) * weights[c]
+               if acc is None
+               else acc + np.asarray(params[c]["w"], np.float64) * weights[c])
+    want = (acc / sum(weights.values())).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fedadam_state_rides_global_and_moves_root():
+    """Server-optimizer state must survive across rounds even though the
+    root aggregator can change (state travels with the retained global)."""
+    fed, session = make_session(6, "fedadam", rounds=4)
+
+    def train(cid, g, r):
+        # every client reports a constant +1 pseudo-gradient direction
+        return {"w": (np.asarray(g["w"]) + 1.0).astype(np.float32)}, 1
+
+    gs = session.run(train, initial_params={"w": np.zeros(4, np.float32)})
+    assert len(gs) == 4
+    # every participant's ctx carries the replicated server state
+    states = [cl.models.get("s").server_state
+              for cl in session.participants.values()]
+    assert all(s is not None and s["t"] >= 1 for s in states)
+    # the server optimizer keeps stepping in the pseudo-gradient direction,
+    # using moments accumulated across root changes
+    means = [float(np.mean(g["w"])) for g in gs]
+    assert means[0] == pytest.approx(1.0)      # round 0: plain mean
+    assert means[1] < means[2] < means[3]
+
+
+def test_fedprox_shrinks_toward_previous_global():
+    fed, session = make_session(4, "fedprox", rounds=2)
+    rng = np.random.default_rng(1)
+    p = {"w": rng.normal(size=(4,)).astype(np.float32)}
+    session.run_round(lambda cid, g, r: (p, 1))
+    g1 = session.global_params()["w"]          # round 0: no ref -> plain avg
+    np.testing.assert_allclose(g1, p["w"], rtol=1e-6)
+    q = {"w": (np.asarray(p["w"]) + 1.0).astype(np.float32)}
+    session.run_round(lambda cid, g, r: (q, 1))
+    g2 = session.global_params()["w"]
+    mu = get_strategy("fedprox").mu
+    want = (1 - mu) * q["w"] + mu * g1
+    np.testing.assert_allclose(g2, want, rtol=1e-5)
+
+
+def test_tuned_strategy_instance_keeps_hyperparameters():
+    """A tuned instance passed to create_session must be what aggregators
+    apply — not the registry default re-instantiated by name."""
+    from repro.api.strategies import TrimmedMean
+    n = 5
+    fed = Federation(aggregator_ratio=0.4)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients,
+                                 strategy=TrimmedMean(beta=0.4))
+    rng = np.random.default_rng(2)
+    params = {f"c{i}": {"w": rng.normal(size=(6,)).astype(np.float32)}
+              for i in range(n)}
+    session.run_round(lambda cid, g, r: (params[cid], 1))
+    got = session.global_params()["w"]
+    stacked = np.stack([params[f"c{i}"]["w"] for i in range(n)])
+    want_04 = TrimmedMean(beta=0.4).combine({"w": stacked}, None, np)["w"]
+    want_default = TrimmedMean().combine({"w": stacked}, None, np)["w"]
+    np.testing.assert_array_equal(got, np.asarray(want_04, np.float32))
+    assert not np.array_equal(got, np.asarray(want_default, np.float32))
+    # the tuned instance must not contaminate the shared registry default
+    assert get_strategy("trimmed_mean").beta == TrimmedMean().beta
+
+
+def test_two_sessions_disjoint_clients_both_deliver_callbacks():
+    fed = Federation()
+    sa = fed.create_session("sa", "m", rounds=1,
+                            participants=[fed.client(f"a{i}") for i in range(3)])
+    sb = fed.create_session("sb", "m", rounds=1,
+                            participants=[fed.client(f"b{i}") for i in range(3)])
+    got = []
+    sa.on_global_update = lambda p, v: got.append(("sa", v))
+    sb.on_global_update = lambda p, v: got.append(("sb", v))
+    p = {"w": np.zeros(2, np.float32)}
+    sa.run_round(lambda cid, g, r: (p, 1))
+    sb.run_round(lambda cid, g, r: (p, 1))
+    assert got == [("sa", 1), ("sb", 1)]
+    assert sa.global_params() is not None and sb.global_params() is not None
+
+
+def test_unknown_strategy_fails_fast():
+    fed = Federation()
+    with pytest.raises(KeyError, match="unknown aggregation strategy"):
+        fed.create_session("s", "m", rounds=1,
+                           participants=[fed.client("c0")],
+                           strategy="does_not_exist")
+    assert set(list_strategies()) >= {"fedavg", "fedprox", "trimmed_mean",
+                                      "coordinate_median", "fedadam"}
+
+
+# ---------------------------------------------------------------------------
+# Facade: elastic membership, failures, callbacks
+# ---------------------------------------------------------------------------
+
+def test_elastic_join_and_leave_through_session():
+    fed, session = make_session(4, rounds=4, capacity=(4, 8))
+    assert session.state == "waiting"      # headroom left for elastic joins
+    assert session.start()                 # waiting time elapsed: quorum ok
+    assert session.state == "running"
+    p = {"w": np.ones(3, np.float32)}
+    session.run_round(lambda cid, g, r: (p, 1))
+    late = fed.client("late")
+    assert session.join(late)
+    assert "late" in session.contributors()
+    assert late.arbiter.assignment is not None
+    session.run_round(lambda cid, g, r: (p, 1))
+    np.testing.assert_allclose(session.global_params()["w"], 1.0)
+    session.leave("late")
+    assert "late" not in session.contributors()
+    session.run_round(lambda cid, g, r: (p, 1))
+    assert session.state in ("running", "terminated")
+
+
+def test_lwt_failure_mid_round_completes_through_session():
+    """A client dies abnormally after quorum: the LWT fires, the coordinator
+    rearranges, and the round still converges to the live-set average."""
+    fed, session = make_session(6, rounds=2)
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(6)}
+    session.fail("c5")
+    assert "c5" not in session.contributors()
+    session.run_round(lambda cid, g, r: (params[cid], 1))
+    live = [f"c{i}" for i in range(5)]
+    want = np.mean([params[c]["w"] for c in live], axis=0)
+    np.testing.assert_allclose(session.global_params()["w"], want, rtol=1e-5)
+
+
+def test_session_callbacks_fire_once_per_event():
+    fed, session = make_session(5, rounds=2)
+    updates, rounds = [], []
+    session.on_global_update = lambda params, version: updates.append(version)
+    session.on_round_start = lambda r: rounds.append(r)
+    p = {"w": np.zeros(2, np.float32)}
+    session.run(lambda cid, g, r: (p, 1), initial_params=p)
+    assert updates == [1, 2]           # deduped across 5 fan-in clients
+    # round 0 started inside create_session; assignment replays it
+    assert rounds == [0, 1]
+
+
+def test_run_loop_terminates_at_round_budget():
+    fed, session = make_session(3, rounds=3)
+    p = {"w": np.zeros(2, np.float32)}
+    gs = session.run(lambda cid, g, r: (p, 1))
+    assert len(gs) == 3
+    assert session.state == "terminated"
+    assert session.global_version() == 3
+
+
+# ---------------------------------------------------------------------------
+# Transport
+# ---------------------------------------------------------------------------
+
+def test_simbroker_satisfies_transport_protocol():
+    assert isinstance(SimBroker(), Transport)
+    assert isinstance(LatencyTransport(SimBroker()), Transport)
+
+
+def test_broker_message_ids_are_per_instance():
+    """Two brokers must issue independent mids (QoS-1 dedup isolation) and
+    identical runs must produce identical delivery logs."""
+    def run():
+        b = SimBroker()
+        b.log_deliveries = True
+        got = []
+        b.connect("c", lambda m: got.append(m.mid))
+        b.subscribe("c", "t/#", qos=1)
+        for i in range(3):
+            b.publish("t/x", b"p", qos=1)
+        return got, list(b.delivery_log)
+    mids1, log1 = run()
+    mids2, log2 = run()
+    assert mids1 == mids2 == [1, 2, 3]
+    assert log1 == log2
+
+
+def test_latency_transport_drops_qos0_keeps_qos1():
+    lt = LatencyTransport(SimBroker(), delay_s=0.01, drop_p=1.0, seed=0)
+    got = []
+    lt.connect("rx", lambda m: got.append(m.topic))
+    lt.subscribe("rx", "t/#", qos=1)
+    lt.publish("t/a", b"x", qos=0, sender="tx")
+    assert got == []                       # fire-and-forget: lost
+    lt.publish("t/b", b"x", qos=1, sender="tx")
+    assert got == ["t/b"]                  # at-least-once: retransmitted
+    stats = lt.sys_stats()["links"]["tx"]
+    assert stats["dropped"] == 1 and stats["retransmits"] == 1
+
+
+def test_latency_transport_per_link_model_and_virtual_time():
+    lt = LatencyTransport(SimBroker(), delay_s=0.01, seed=1)
+    lt.set_link("slow", delay_s=0.5)
+    lt.connect("rx", lambda m: None)
+    lt.subscribe("rx", "t/#")
+    for _ in range(10):
+        lt.publish("t/x", b"p", sender="fast")
+        lt.publish("t/x", b"p", sender="slow")
+    s = lt.sys_stats()
+    assert s["links"]["slow"]["mean_latency_ms"] > \
+        40 * s["links"]["fast"]["mean_latency_ms"]
+    assert s["virtual_time_s"] == pytest.approx(10 * 0.51, rel=1e-6)
+
+
+def test_federation_with_latency_model_still_aggregates_exactly():
+    fed, session = make_session(5, rounds=1,
+                                latency=dict(delay_s=0.02, jitter_s=0.01,
+                                             seed=3))
+    p = {"w": np.full(4, 2.0, np.float32)}
+    session.run_round(lambda cid, g, r: (p, 1))
+    np.testing.assert_allclose(session.global_params()["w"], 2.0)
+    assert fed.broker.sys_stats()["virtual_time_s"] > 0

@@ -113,3 +113,59 @@ print("DRYRUN MICRO OK")
 def test_moe_impls_match_auto():
     out = run_sub(open(os.path.join(ROOT, "scripts/smoke_moe_a2a.py")).read())
     assert "MOE A2A OK" in out
+
+
+@pytest.mark.slow
+def test_compiled_strategies_match_flat_reference():
+    """Every compiled-capable strategy, run as mesh collectives through
+    aggregate_params, must match the same strategy's numpy flat reference —
+    the same registry the host MQTT path consumes."""
+    code = '''
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.api.strategies import get_strategy
+from repro.core.aggregation import aggregate_params
+from repro.core.clustering import build_tree
+from repro.core.topology import compile_tree, flat_schedule
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+n = 4
+rng = np.random.default_rng(0)
+params = {"w": jnp.asarray(rng.normal(size=(n, 8, 6)).astype(np.float32)),
+          "b": jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))}
+specs = {"w": P("data", None, None), "b": P("data", None)}
+weights = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+ref = {"w": jnp.zeros((n, 8, 6), jnp.float32), "b": jnp.ones((n, 5), jnp.float32)}
+tree = compile_tree(build_tree("s", [f"c{i}" for i in range(n)],
+                               [f"c{i}" for i in range(n)], 0.5, 3))
+pw = np.asarray(params["w"]); pb = np.asarray(params["b"]); wv = np.asarray(weights)
+
+for sched in (flat_schedule(n), tree):
+    for name in ("fedavg", "fedprox", "trimmed_mean", "coordinate_median"):
+        strat = get_strategy(name)
+        with mesh:
+            out = jax.jit(lambda p, w, r: aggregate_params(
+                p, w, mesh, "data", sched, specs, strategy=name,
+                ref_params=r if strat.needs_ref else None))(params, weights, ref)
+        if strat.reduction == "stack":
+            want_w = strat.combine({"w": pw}, wv, np)["w"]
+            want_b = strat.combine({"b": pb}, wv, np)["b"]
+        else:
+            cw = np.stack([np.asarray(strat.premap(
+                {"w": pw[i], "b": pb[i]},
+                {"w": np.zeros((8, 6), np.float32), "b": np.ones(5, np.float32)}
+                if strat.needs_ref else None, np)["w"]) for i in range(n)])
+            cb = np.stack([np.asarray(strat.premap(
+                {"w": pw[i], "b": pb[i]},
+                {"w": np.zeros((8, 6), np.float32), "b": np.ones(5, np.float32)}
+                if strat.needs_ref else None, np)["b"]) for i in range(n)])
+            want_w = (cw * wv[:, None, None]).sum(0) / wv.sum()
+            want_b = (cb * wv[:, None]).sum(0) / wv.sum()
+        for i in range(n):
+            np.testing.assert_allclose(np.asarray(out["w"])[i], want_w,
+                                       rtol=2e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(out["b"])[i], want_b,
+                                       rtol=2e-5, atol=1e-6)
+print("COMPILED STRATEGIES OK")
+'''
+    assert "COMPILED STRATEGIES OK" in run_sub(code)
