@@ -79,6 +79,30 @@ def bench_latency_transport_overhead(n_msgs: int = 20000):
              "virtual_time_s": round(b.virtual_time_s, 1)})
 
 
+def bench_event_queue(n_msgs: int = 20000):
+    """Cost of the discrete-event delivery path: enqueue n messages on a
+    held clock (priority queue, per-link jitter), then drain in timestamp
+    order — vs the auto-pump path measured above."""
+    from repro.api import SimClock
+    clock = SimClock()
+    b = LatencyTransport(SimBroker(), delay_s=0.01, jitter_s=0.005,
+                         clock=clock)
+    sink = [0]
+    b.connect("c", lambda m: sink.__setitem__(0, sink[0] + 1))
+    b.subscribe("c", "t/#")
+    payload = b"x" * 256
+    t0 = time.perf_counter()
+    with clock.hold():
+        for i in range(n_msgs):
+            b.publish("t/a", payload, sender=f"s{i % 16}")
+        clock.run_until_idle()
+    dt = time.perf_counter() - t0
+    assert sink[0] == n_msgs
+    return ("event_queue_drain", dt / n_msgs * 1e6,
+            {"msgs_per_s": round(n_msgs / dt), "senders": 16,
+             "virtual_time_s": round(clock.now, 2)})
+
+
 def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
     """Messages for role rearrangement vs full arrangement per round."""
     fed = Federation(role_policy="round_robin")
@@ -102,7 +126,8 @@ def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
 
 def run(verbose: bool = True):
     rows = [bench_raw_throughput(), bench_batching(), bench_compression(),
-            bench_latency_transport_overhead(), bench_rearrangement_cost()]
+            bench_latency_transport_overhead(), bench_event_queue(),
+            bench_rearrangement_cost()]
     if verbose:
         for name, us, d in rows:
             print(f"  {name}: {d}")

@@ -29,6 +29,8 @@ _EXPORTS = {
     "Transport": ("repro.api.transport", "Transport"),
     "LatencyTransport": ("repro.api.transport", "LatencyTransport"),
     "LinkModel": ("repro.api.transport", "LinkModel"),
+    "SimClock": ("repro.api.transport", "SimClock"),
+    "scenarios": ("repro.api.scenarios", None),   # submodule, not attribute
 }
 
 __all__ = sorted(_EXPORTS)
@@ -40,7 +42,8 @@ def __getattr__(name: str):
     except KeyError:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
     import importlib
-    return getattr(importlib.import_module(mod_name), attr)
+    mod = importlib.import_module(mod_name)
+    return mod if attr is None else getattr(mod, attr)
 
 
 def __dir__():

@@ -23,13 +23,20 @@ examples, benchmarks, and drivers stop hand-rolling the loop::
 Edge-network scenarios: pass ``latency=dict(delay_s=..., jitter_s=...,
 drop_p=...)`` (or a prebuilt LatencyTransport) to model per-link delay and
 loss on the control/model plane.
+
+Virtual time: every federation owns a ``SimClock`` shared by its transport
+and coordinator.  By default the clock auto-drains (each publish delivers
+to idle — identical to a synchronous pump); inside ``fed.clock.hold()``
+deliveries queue at their modeled arrival times and ``session.step_time``
+(or ``repro.api.scenarios.play``) releases them in timestamp order, so
+reordering, partitions, straggler deadlines, and churn become exercisable.
 """
 from __future__ import annotations
 
 from typing import Callable, Iterable, Optional, Union
 
 from repro.api.strategies import AggregationStrategy, get_strategy
-from repro.api.transport import LatencyTransport, Transport
+from repro.api.transport import LatencyTransport, SimClock, Transport
 from repro.core.broker import SimBroker
 from repro.core.client import Params, SDFLMQClient
 from repro.core.coordinator import Coordinator, CoordinatorConfig
@@ -49,19 +56,40 @@ class Federation:
                  aggregator_ratio: float = 0.3,
                  levels: int = 3,
                  round_deadline_s: float = 0.0,
+                 flush_spacing_s: float = 0.0,
+                 clock: Optional[SimClock] = None,
                  coordinator_cfg: Optional[CoordinatorConfig] = None):
         transport = transport if transport is not None else SimBroker()
-        if latency:
-            transport = LatencyTransport(transport, **latency)
+        if not isinstance(transport, LatencyTransport):
+            transport = LatencyTransport(transport, clock=clock or SimClock(),
+                                         **(latency or {}))
+        elif latency:
+            transport = LatencyTransport(transport,
+                                         clock=clock or transport.clock,
+                                         **latency)
+        elif clock is not None:
+            # prebuilt LatencyTransport + explicit clock: rebase the (still
+            # fresh) transport onto the caller's clock rather than silently
+            # ignoring it
+            transport.clock = clock
         self.transport = transport
+        self.clock = transport.clock
         self.coordinator = Coordinator(
             transport,
             coordinator_cfg or CoordinatorConfig(
                 role_policy=role_policy, aggregator_ratio=aggregator_ratio,
-                levels=levels, round_deadline_s=round_deadline_s))
+                levels=levels, round_deadline_s=round_deadline_s,
+                flush_spacing_s=flush_spacing_s),
+            clock=self.clock)
         self.param_server = ParameterServer(transport)
         self.clients: dict[str, SDFLMQClient] = {}
         self.sessions: dict[str, "FederatedSession"] = {}
+
+    def deliver(self) -> None:
+        """Drain every in-flight delivery (no-op while the clock is held —
+        then ``clock.advance_to``/``session.step_time`` controls release)."""
+        if not self.clock.held:
+            self.clock.run_until_idle()
 
     # alias: the transport of a single-broker federation IS the broker
     @property
@@ -170,11 +198,14 @@ class FederatedSession:
     def join(self, client: Union[str, SDFLMQClient], rounds: int = 0,
              preferred_role: Optional[str] = None) -> bool:
         """Join (also mid-run: the coordinator rearranges roles).  Returns
-        whether the coordinator admitted the client."""
+        whether the coordinator admitted the client.  The admission
+        handshake is synchronous: even on a held clock, queued deliveries
+        are drained so the answer reflects the coordinator's decision."""
         cl = (client if isinstance(client, SDFLMQClient)
               else self.federation.client(client))
         cl.join_fl_session(self.session_id, self.model_name, fl_rounds=rounds,
                            preferred_role=preferred_role)
+        self.federation.clock.run_until_idle()
         ok = cl.client_id in self._session.contributors
         if ok:
             self._admit(cl)
@@ -201,12 +232,14 @@ class FederatedSession:
     # ------------------------------------------------------------------
     # Round loop
     # ------------------------------------------------------------------
-    def run_round(self, train_fn: TrainFn,
-                  stats_fn: Optional[Callable] = None) -> Optional[Params]:
-        """One federated round: local training on every participant, models
-        up the cluster tree, readiness signals (round-status updates, paper
-        §III-E4).  ``stats_fn(client_id, round_idx) -> ClientStats`` feeds
-        fresh system stats to the role optimizer.  Returns the new global."""
+    def run_round_async(self, train_fn: TrainFn,
+                        stats_fn: Optional[Callable] = None) -> int:
+        """Local training on every participant, models up the cluster tree,
+        readiness signals (round-status updates, paper §III-E4) — without
+        waiting for delivery.  With the clock held, every message sits in
+        the delivery queue at its modeled arrival time; drive it with
+        ``step_time``/``clock.advance_to`` (or ``scenarios.play``).
+        Returns the round index the work was published for."""
         rnd = self.round_idx
         base = self.global_params()
         if base is None:
@@ -216,11 +249,31 @@ class FederatedSession:
             cl.set_model(self.session_id, params, n_samples=n_samples)
         for cid, cl in sorted(self.participants.items()):
             cl.send_local(self.session_id)
-        new_global = self.global_params()
         for cid, cl in sorted(self.participants.items()):
             cl.signal_ready(self.session_id,
                             stats=stats_fn(cid, rnd) if stats_fn else None)
-        return new_global
+        return rnd
+
+    def run_round(self, train_fn: TrainFn,
+                  stats_fn: Optional[Callable] = None) -> Optional[Params]:
+        """One federated round: ``run_round_async`` + drain all deliveries.
+        ``stats_fn(client_id, round_idx) -> ClientStats`` feeds fresh system
+        stats to the role optimizer.  Returns the new global."""
+        self.run_round_async(train_fn, stats_fn=stats_fn)
+        self.federation.deliver()
+        return self.global_params()
+
+    def step_time(self, dt: Optional[float] = None) -> float:
+        """Advance the federation's virtual clock — firing queued deliveries
+        AND timers (round deadlines, scenario triggers) in timestamp order.
+        ``dt=None`` steps to the next pending event.  Returns ``clock.now``."""
+        clock = self.federation.clock
+        if dt is None:
+            nxt = clock.next_event_time()
+            if nxt is not None:
+                clock.advance_to(nxt)
+            return clock.now
+        return clock.advance(dt)
 
     def run(self, train_fn: TrainFn, rounds: Optional[int] = None,
             initial_params: Optional[Params] = None,

@@ -1,0 +1,234 @@
+"""Declarative edge-network scenarios over the virtual clock.
+
+Scenario builders turn "what goes wrong" into armed events on a
+federation's ``SimClock`` (time-driven: partitions, flaky links) or its
+round loop (round-driven churn, layered on ``ft.failures.FailurePlan``)::
+
+    from repro.api import Federation, scenarios
+
+    fed = Federation(latency=dict(delay_s=0.01), round_deadline_s=2.0)
+    session = fed.create_session(...)
+    report = scenarios.play(
+        session, train_fn,
+        events=[scenarios.partition([["c0", "c1"], ["c2", "c3"]],
+                                    t0=2.0, t1=5.0),
+                scenarios.flaky_link("c4", p=0.3, delay_s=0.2),
+                scenarios.churn(fail_at={3: ["c5"]}, join_at={5: ["c9"]})],
+        rounds=8, round_time_s=1.0,
+        initial_params=init)
+
+``play`` drives a ``step_time``-paced round loop: each round's training and
+publishes are enqueued with the clock **held**, then virtual time advances
+in ``round_time_s`` strides — deliveries and control-plane timers (round
+deadlines, partition windows) fire strictly in timestamp order, so messages
+genuinely reorder, partitioned traffic waits for heal, and deadline cuts
+land between deliveries exactly as they would on a real edge network.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.ft.failures import FailurePlan
+
+
+# ---------------------------------------------------------------------------
+# Scenario events
+# ---------------------------------------------------------------------------
+
+class ScenarioEvent:
+    """Base: ``arm`` schedules time-driven triggers; ``apply_round`` fires
+    once per round launch (before training)."""
+
+    def arm(self, session) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def apply_round(self, session, round_idx: int) -> None:
+        pass
+
+
+@dataclass
+class Partition(ScenarioEvent):
+    """Cut connectivity between client groups during ``[t0, t1)`` virtual
+    seconds.  ``t1=None`` leaves the partition open until an explicit
+    ``transport.heal()``.  Clients not named in any group (coordinator,
+    parameter server, ...) keep full connectivity unless listed."""
+    groups: Sequence[Sequence[str]]
+    t0: float = 0.0
+    t1: Optional[float] = None
+
+    def arm(self, session) -> None:
+        transport = session.federation.transport
+        clock = session.federation.clock
+        clock.schedule(self.t0,
+                       lambda: transport.partition(*self.groups), timer=True)
+        if self.t1 is not None:
+            clock.schedule(self.t1, transport.heal, timer=True)
+
+
+@dataclass
+class FlakyLink(ScenarioEvent):
+    """Degrade one client's link (loss probability ``p`` + optional extra
+    delay/jitter) during ``[t0, t1)``; restores the previous model at t1."""
+    client_id: str
+    p: float = 0.0
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    t0: float = 0.0
+    t1: Optional[float] = None
+
+    def arm(self, session) -> None:
+        transport = session.federation.transport
+        clock = session.federation.clock
+        saved: list = []
+
+        def degrade():
+            saved.append(transport.links.get(self.client_id))
+            transport.set_link(self.client_id, delay_s=self.delay_s,
+                               jitter_s=self.jitter_s, drop_p=self.p)
+
+        def restore():
+            prev = saved.pop() if saved else None
+            if prev is None:
+                transport.clear_link(self.client_id)
+            else:
+                transport.links[self.client_id] = prev
+
+        clock.schedule(self.t0, degrade, timer=True)
+        if self.t1 is not None:
+            clock.schedule(self.t1, restore, timer=True)
+
+
+@dataclass
+class Churn(ScenarioEvent):
+    """Round-driven membership churn from a ``FailurePlan``: at round ``r``
+    fail ``plan.fail_at[r]`` abnormally (LWT fires), join
+    ``plan.join_at[r]`` elastically, and slow ``plan.straggle_at[r]``
+    (extra per-link delay for that round only)."""
+    plan: FailurePlan
+    _slowed: dict = field(default_factory=dict)
+
+    def apply_round(self, session, round_idx: int) -> None:
+        transport = session.federation.transport
+        clock = session.federation.clock
+        # restore last round's stragglers
+        for cid, prev in self._slowed.items():
+            if prev is None:
+                transport.clear_link(cid)
+            else:
+                transport.links[cid] = prev
+        self._slowed = {}
+        changed = False
+        for cid in self.plan.fail_at.get(round_idx, []):
+            if cid in session.participants:
+                session.fail(cid)
+                changed = True
+        for cid in self.plan.join_at.get(round_idx, []):
+            session.join(session.federation.client(cid))
+            changed = True
+        if changed:
+            # settle the rearrangement handshake before training starts, so
+            # churn applies at the round boundary (not mid-flight)
+            clock.run_until_idle()
+        for cid, extra in self.plan.straggle_at.get(round_idx, {}).items():
+            if cid not in session.participants:
+                continue
+            self._slowed[cid] = transport.links.get(cid)
+            transport.set_link(cid, delay_s=extra)
+
+
+# ---- builders (the declarative surface) -----------------------------------
+
+def partition(groups: Sequence[Sequence[str]], t0: float = 0.0,
+              t1: Optional[float] = None) -> Partition:
+    return Partition(groups, t0, t1)
+
+
+def flaky_link(client_id: str, p: float = 0.0, delay_s: float = 0.0,
+               jitter_s: float = 0.0, t0: float = 0.0,
+               t1: Optional[float] = None) -> FlakyLink:
+    return FlakyLink(client_id, p, delay_s, jitter_s, t0, t1)
+
+
+def churn(plan: Optional[FailurePlan] = None, *,
+          fail_at: Optional[dict] = None, join_at: Optional[dict] = None,
+          straggle_at: Optional[dict] = None) -> Churn:
+    if plan is None:
+        plan = FailurePlan(fail_at=fail_at or {}, join_at=join_at or {},
+                           straggle_at=straggle_at or {})
+    return Churn(plan)
+
+
+# ---------------------------------------------------------------------------
+# The scenario runner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ScenarioReport:
+    rounds_launched: int = 0
+    rounds_completed: int = 0
+    final_state: str = ""
+    virtual_time_s: float = 0.0
+    deadline_cuts: int = 0
+    stale_dropped: int = 0
+    partition_held: int = 0
+    partition_dropped: int = 0
+    stalled: bool = False
+    timeline: list = field(default_factory=list)   # (t, event) breadcrumbs
+
+
+def play(session, train_fn: Callable, events: Sequence[ScenarioEvent] = (),
+         rounds: Optional[int] = None, round_time_s: float = 1.0,
+         initial_params=None, stats_fn: Optional[Callable] = None,
+         max_idle_steps: int = 50) -> ScenarioReport:
+    """Drive ``session`` through a virtual-time round loop with ``events``
+    armed.  Each newly started round is trained + published immediately,
+    then the clock advances in ``round_time_s`` strides until the session
+    terminates, ``rounds`` rounds have launched, or no progress is made for
+    ``max_idle_steps`` strides (e.g. an unhealed partition with no round
+    deadline) — then ``report.stalled`` is set."""
+    fed = session.federation
+    clock = fed.clock
+    report = ScenarioReport()
+    if initial_params is not None:
+        session._initial = initial_params
+    for ev in events:
+        ev.arm(session)
+    launched = -1
+    idle = 0
+    with clock.hold():
+        while session.state == "running":
+            r = session.round_idx
+            if rounds is not None and report.rounds_launched >= rounds \
+                    and r != launched:
+                break
+            if r != launched:
+                for ev in events:
+                    ev.apply_round(session, r)
+                if session.state != "running" or not session.participants:
+                    break
+                session.run_round_async(train_fn, stats_fn=stats_fn)
+                launched = r
+                report.rounds_launched += 1
+                report.timeline.append((round(clock.now, 6), f"round {r}"))
+                idle = 0
+            clock.advance(round_time_s)
+            if session.round_idx == launched:
+                idle += 1
+                if idle >= max_idle_steps:
+                    report.stalled = True
+                    break
+    fed.deliver()
+    report.rounds_completed = session.round_idx
+    report.final_state = session.state
+    report.virtual_time_s = clock.now
+    coord = fed.coordinator
+    report.deadline_cuts = coord.deadline_cuts
+    transport = fed.transport
+    report.partition_held = getattr(transport, "partition_held", 0)
+    report.partition_dropped = getattr(transport, "partition_dropped", 0)
+    report.stale_dropped = sum(
+        cl.models.sessions[session.session_id].stale_dropped
+        for cl in session.participants.values()
+        if session.session_id in cl.models.sessions)
+    return report

@@ -5,20 +5,46 @@ the coordinator, and the parameter server depend on this surface only, so a
 real paho-mqtt backend (or a multi-broker bridge fabric) can slot in behind
 the same federation code.
 
-``LatencyTransport`` decorates any Transport with a per-link edge-network
-model (base delay + jitter + loss probability per publishing client):
+``SimClock`` is a discrete-event virtual clock: a priority queue of
+timestamped events drained strictly in ``(time, insertion)`` order.  Two
+event classes live on it:
 
-  * QoS 0 publishes are *really* dropped with probability ``drop_p`` —
-    message-loss scenarios exercise the straggler/flush machinery;
+  * **message events** — in-flight deliveries scheduled by transports and
+    broker bridges; drained by ``run_until_idle()`` and by any time advance;
+  * **timer events** — control-plane alarms (round deadlines, waiting-time
+    expiry, scenario triggers); they fire *only* when time is explicitly
+    advanced (``advance_to``/``advance``), never during a plain message
+    drain, so legacy synchronous flows are untouched.
+
+``LatencyTransport`` decorates any Transport with a per-link edge-network
+model (base delay + jitter + loss probability per publishing client) and an
+**event-driven delivery queue**: each publish is enqueued with its modeled
+arrival time instead of pumping immediately, so
+
+  * two clients' updates published A,B can genuinely arrive B,A under
+    asymmetric link delay (hold the clock, then drain);
+  * QoS 0 publishes are *really* dropped with probability ``drop_p``;
   * QoS >= 1 publishes always arrive (at-least-once) but a drawn drop
-    counts as a retransmission and doubles that message's modeled latency;
-  * delivery stays synchronous and deterministic (the decorated broker
-    pumps immediately); latency is tracked on a virtual clock, so examples
-    and tests observe per-link/per-round timing without wall-clock sleeps.
+    counts as a retransmission and the message arrives *late* (2x latency)
+    — genuinely after messages sent later on faster links;
+  * ``partition(groups)`` holds QoS>=1 traffic between clients in
+    different groups until ``heal()`` (QoS 0 cross-partition traffic is
+    lost, as a real broker outage would lose it);
+  * with the clock un-held (the default), every top-level publish drains
+    the queue to idle immediately, which is behaviorally identical to the
+    old synchronous pump — zero-delay models stay bit-identical.
+
+Randomness is drawn from a *per-link* seeded ``random.Random`` stream
+(keyed on ``(seed, sender)``), so a link's jitter/drop sequence is
+reproducible regardless of how messages from other links interleave, and
+parallel tests never share RNG state.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import random
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
@@ -45,6 +71,140 @@ class Transport(Protocol):
     def sys_stats(self) -> dict: ...
 
 
+# ---------------------------------------------------------------------------
+# Virtual time
+# ---------------------------------------------------------------------------
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable = field(compare=False)
+    timer: bool = field(compare=False, default=False)
+    cancelled: bool = field(compare=False, default=False)
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class SimClock:
+    """Discrete-event virtual clock shared by transports, brokers, and the
+    coordinator.  ``schedule`` enqueues an event; draining fires events in
+    strict ``(time, insertion)`` order and advances ``now`` to each event's
+    timestamp — time never flows backwards."""
+
+    def __init__(self, now: float = 0.0):
+        self.now = float(now)
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self._held = 0
+        self._draining = False
+        self._idle_cbs: list[Callable] = []
+
+    # ---- scheduling ------------------------------------------------------
+    def schedule(self, t: float, fn: Callable, timer: bool = False) -> _Event:
+        """Schedule ``fn`` to run at virtual time ``t`` (clamped to now).
+        ``timer=True`` marks a control-plane alarm: it fires only on
+        explicit time advances, never during a message drain."""
+        ev = _Event(max(float(t), self.now), next(self._seq), fn, timer)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def call_when_idle(self, fn: Callable) -> None:
+        """Run ``fn`` (once) the next time the message queue is empty —
+        i.e. after every in-flight delivery cascade has settled."""
+        self._idle_cbs.append(fn)
+
+    # ---- hold: manual mode ----------------------------------------------
+    @property
+    def held(self) -> bool:
+        return self._held > 0
+
+    @contextmanager
+    def hold(self):
+        """While held, transports stop auto-draining after each publish:
+        deliveries accumulate in the queue and are released only by
+        ``advance_to``/``advance``/``run_until_idle`` — this is what lets
+        messages genuinely arrive out of publish order."""
+        self._held += 1
+        try:
+            yield self
+        finally:
+            self._held -= 1
+
+    # ---- introspection ---------------------------------------------------
+    def pending(self, timers: bool = True) -> int:
+        return sum(1 for e in self._heap if not e.cancelled
+                   and (timers or not e.timer))
+
+    def next_event_time(self) -> Optional[float]:
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)        # lazy cleanup: O(1) amortized
+        return self._heap[0].time if self._heap else None
+
+    # ---- draining --------------------------------------------------------
+    def _pop_due(self, limit: float, timers: bool) -> Optional[_Event]:
+        skipped = []
+        ev = None
+        while self._heap:
+            cand = heapq.heappop(self._heap)
+            if cand.cancelled:
+                continue
+            if cand.time > limit:
+                skipped.append(cand)
+                break
+            if cand.timer and not timers:
+                skipped.append(cand)
+                continue
+            ev = cand
+            break
+        for s in skipped:
+            heapq.heappush(self._heap, s)
+        return ev
+
+    def _fire_idle_cbs(self) -> bool:
+        if self._idle_cbs and self.pending(timers=False) == 0:
+            cbs, self._idle_cbs = self._idle_cbs, []
+            for cb in cbs:
+                cb()
+            return True
+        return False
+
+    def _drain(self, limit: float, timers: bool) -> None:
+        if self._draining:
+            return
+        self._draining = True
+        try:
+            while True:
+                # idle callbacks fire the moment no message events remain —
+                # checked before the next (possibly later) timer pops, so
+                # "the cascade settled" is observed at the right instant
+                if self._fire_idle_cbs():
+                    continue
+                ev = self._pop_due(limit, timers)
+                if ev is None:
+                    break
+                self.now = max(self.now, ev.time)
+                ev.fn()
+        finally:
+            self._draining = False
+
+    def run_until_idle(self) -> None:
+        """Deliver every queued *message* event in timestamp order (timers
+        stay armed), advancing ``now`` along the way."""
+        self._drain(float("inf"), timers=False)
+
+    def advance_to(self, t: float) -> float:
+        """Advance virtual time to ``t``, firing every event (messages AND
+        timers) scheduled at or before ``t`` in exact timestamp order."""
+        self._drain(float(t), timers=True)
+        self.now = max(self.now, float(t))
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        return self.advance_to(self.now + dt)
+
+
 @dataclass
 class LinkModel:
     """Per-link network parameters (seconds / probability)."""
@@ -68,30 +228,105 @@ class _LinkStats:
 
 
 class LatencyTransport:
-    """Deterministic per-link delay/jitter/drop decorator over a Transport."""
+    """Event-driven per-link delay/jitter/drop/partition decorator over a
+    Transport, scheduling deliveries on a shared ``SimClock``."""
 
     def __init__(self, inner: Transport, delay_s: float = 0.0,
-                 jitter_s: float = 0.0, drop_p: float = 0.0, seed: int = 0):
+                 jitter_s: float = 0.0, drop_p: float = 0.0, seed: int = 0,
+                 clock: Optional[SimClock] = None):
         self.inner = inner
         self.default = LinkModel(delay_s, jitter_s, drop_p)
         self.links: dict[str, LinkModel] = {}
-        self.rng = random.Random(seed)
-        self.virtual_time_s = 0.0
+        self.seed = seed
+        self._rngs: dict[str, random.Random] = {}
+        self.clock = clock if clock is not None else SimClock()
         self.link_stats: dict[str, _LinkStats] = {}
+        # partition state: list of disjoint client-id groups; traffic
+        # between different groups is cut (ungrouped actors reach everyone)
+        self._groups: Optional[list[set]] = None
+        self._held_msgs: list[tuple[str, Any]] = []     # (receiver, Message)
+        self._callbacks: dict[str, Callable] = {}
+        self._current_sender: Optional[str] = None
+        self._last_arrival: dict[str, float] = {}       # per-sender FIFO
+        self.partition_held = 0
+        self.partition_dropped = 0
 
     @property
     def name(self) -> str:
         return self.inner.name
 
+    @property
+    def virtual_time_s(self) -> float:
+        return self.clock.now
+
     def set_link(self, client_id: str, delay_s: float = 0.0,
                  jitter_s: float = 0.0, drop_p: float = 0.0) -> None:
         self.links[client_id] = LinkModel(delay_s, jitter_s, drop_p)
 
+    def clear_link(self, client_id: str) -> None:
+        self.links.pop(client_id, None)
+
+    def _rng_for(self, sender: str) -> random.Random:
+        rng = self._rngs.get(sender)
+        if rng is None:
+            rng = self._rngs[sender] = random.Random(f"{self.seed}/{sender}")
+        return rng
+
+    # ---- partitions ------------------------------------------------------
+    def partition(self, *groups) -> None:
+        """Cut connectivity between clients in different ``groups`` (each an
+        iterable of client ids).  Clients not named in any group keep full
+        connectivity.  QoS>=1 and retained traffic across the cut is held;
+        QoS 0 traffic is lost."""
+        self._groups = [set(g) for g in groups]
+
+    def heal(self) -> None:
+        """Restore connectivity and release held messages (delivered at the
+        heal time, in the order they were originally routed)."""
+        self._groups = None
+        held, self._held_msgs = self._held_msgs, []
+        for receiver, msg in held:
+            self.clock.schedule(
+                self.clock.now,
+                lambda r=receiver, m=msg: self._deliver_direct(r, m))
+        if not self.clock.held:
+            self.clock.run_until_idle()
+
+    def _cut(self, sender: str, receiver: str) -> bool:
+        if self._groups is None or sender == receiver:
+            return False
+        gs = gr = None
+        for g in self._groups:
+            if sender in g:
+                gs = g
+            if receiver in g:
+                gr = g
+        return gs is not None and gr is not None and gs is not gr
+
+    def _deliver_direct(self, receiver: str, msg) -> None:
+        fn = self._callbacks.get(receiver)
+        if fn is not None:
+            fn(msg)
+
     # ---- Transport surface ----------------------------------------------
     def connect(self, client_id, on_message, will=None):
-        return self.inner.connect(client_id, on_message, will=will)
+        self._callbacks[client_id] = on_message
+
+        def guarded(msg, _cid=client_id, _fn=on_message):
+            snd = self._current_sender
+            if snd is not None and self._cut(snd, _cid):
+                if msg.qos >= 1 or msg.retain:
+                    self.partition_held += 1
+                    self._held_msgs.append((_cid, msg))
+                else:
+                    self.partition_dropped += 1
+                return
+            _fn(msg)
+
+        return self.inner.connect(client_id, guarded, will=will)
 
     def disconnect(self, client_id, graceful: bool = True):
+        self._callbacks.pop(client_id, None)
         return self.inner.disconnect(client_id, graceful=graceful)
 
     def subscribe(self, client_id, topic_filter, qos: int = 0):
@@ -104,21 +339,42 @@ class LatencyTransport:
                 retain: bool = False, sender: str = "") -> int:
         link = self.links.get(sender, self.default)
         st = self.link_stats.setdefault(sender or "<anon>", _LinkStats())
-        lat = link.delay_s + self.rng.uniform(0.0, link.jitter_s)
-        if link.drop_p and self.rng.random() < link.drop_p:
+        rng = self._rng_for(sender or "<anon>")
+        lat = link.delay_s + rng.uniform(0.0, link.jitter_s)
+        if link.drop_p and rng.random() < link.drop_p:
             if qos == 0:
                 st.dropped += 1
                 return -1                     # fire-and-forget: lost
-            st.retransmits += 1               # at-least-once: resend once
-            lat *= 2.0
+            st.retransmits += 1               # at-least-once: resend once,
+            lat *= 2.0                        # arriving genuinely late
         st.observe(lat)
-        self.virtual_time_s += lat
-        return self.inner.publish(topic, payload, qos=qos, retain=retain,
-                                  sender=sender)
+        # per-sender FIFO: one client's messages ride one ordered MQTT
+        # connection, so a later publish never overtakes an earlier one
+        # (cross-sender reordering is real; same-sender reordering is not)
+        key = sender or "<anon>"
+        arrival = max(self.clock.now + lat, self._last_arrival.get(key, 0.0))
+        self._last_arrival[key] = arrival
+        self.clock.schedule(
+            arrival,
+            lambda: self._deliver(topic, payload, qos, retain, sender))
+        if not self.clock.held:
+            self.clock.run_until_idle()
+        return 0
+
+    def _deliver(self, topic, payload, qos, retain, sender) -> None:
+        prev, self._current_sender = self._current_sender, sender or None
+        try:
+            self.inner.publish(topic, payload, qos=qos, retain=retain,
+                               sender=sender)
+        finally:
+            self._current_sender = prev
 
     def sys_stats(self) -> dict:
         out = dict(self.inner.sys_stats())
-        out["virtual_time_s"] = round(self.virtual_time_s, 6)
+        out["virtual_time_s"] = round(self.clock.now, 6)
+        out["pending_deliveries"] = self.clock.pending(timers=False)
+        out["partition_held"] = self.partition_held
+        out["partition_dropped"] = self.partition_dropped
         out["links"] = {
             k: {"messages": s.messages, "dropped": s.dropped,
                 "retransmits": s.retransmits,

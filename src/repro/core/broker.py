@@ -20,6 +20,7 @@ like the paper does over MQTT.
 from __future__ import annotations
 
 import itertools
+import random
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -44,9 +45,14 @@ class Subscription:
 
 
 def topic_matches(topic_filter: str, topic: str) -> bool:
-    """MQTT wildcard matching: ``+`` one level, ``#`` trailing multi-level."""
+    """MQTT 3.1.1 wildcard matching: ``+`` one level, ``#`` trailing
+    multi-level (also covering the parent level), and topics whose first
+    level starts with ``$`` (e.g. ``$SYS``) are never matched by a filter
+    that *starts* with a wildcard [MQTT-4.7.2-1]."""
     f_parts = topic_filter.split("/")
     t_parts = topic.split("/")
+    if t_parts[0].startswith("$") and f_parts[0] in ("+", "#"):
+        return False
     for i, f in enumerate(f_parts):
         if f == "#":
             return i == len(f_parts) - 1
@@ -92,6 +98,42 @@ class SysStats:
         }
 
 
+@dataclass
+class _BridgeLink:
+    """One directed broker-to-broker bridge with its own network model."""
+    other: "SimBroker"
+    filters: list[str]
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    drop_p: float = 0.0
+    clock: Optional[object] = None         # SimClock-like: .now / .schedule
+    rng: random.Random = field(default_factory=random.Random)
+    forwarded: int = 0
+    dropped: int = 0
+    retransmitted: int = 0
+
+    def forward(self, src: "SimBroker", msg: Message) -> None:
+        lat = self.delay_s + (self.rng.uniform(0.0, self.jitter_s)
+                              if self.jitter_s else 0.0)
+        if self.drop_p and self.rng.random() < self.drop_p:
+            if msg.qos == 0:
+                self.dropped += 1          # fire-and-forget: lost in transit
+                return
+            self.retransmitted += 1        # at-least-once across the bridge:
+            lat *= 2.0                     # resend once, arriving late
+        src.stats.bridge_forwards += 1
+        self.forwarded += 1
+        if self.clock is not None and lat > 0:
+            self.clock.schedule(
+                self.clock.now + lat,
+                lambda: self.other.publish(msg.topic, msg.payload, msg.qos,
+                                           msg.retain,
+                                           _origin=msg.origin_broker))
+        else:
+            self.other.publish(msg.topic, msg.payload, msg.qos, msg.retain,
+                               _origin=msg.origin_broker)
+
+
 class SimBroker:
     """Reference implementation of the ``repro.api.transport.Transport``
     protocol (the surface MQTTFC, clients, and the coordinator depend on)."""
@@ -105,7 +147,7 @@ class SimBroker:
         self._retained: dict[str, Message] = {}
         self._queue: deque = deque()
         self._pumping = False
-        self._bridges: list[tuple["SimBroker", list[str]]] = []
+        self._bridges: list[_BridgeLink] = []
         self.stats = SysStats()
         self.delivery_log: list[tuple[str, str, int]] = []  # (topic, client, size)
         self.log_deliveries = False
@@ -187,13 +229,11 @@ class SimBroker:
         if not matched:
             self.stats.dropped_no_subscriber += 1
         # bridge forwarding with loop prevention
-        for other, filters in self._bridges:
-            if msg.origin_broker == other.name:
+        for br in self._bridges:
+            if msg.origin_broker == br.other.name:
                 continue
-            if any(topic_matches(f, msg.topic) for f in filters):
-                self.stats.bridge_forwards += 1
-                other.publish(msg.topic, msg.payload, msg.qos, msg.retain,
-                              _origin=msg.origin_broker)
+            if any(topic_matches(f, msg.topic) for f in br.filters):
+                br.forward(self, msg)
 
     def _deliver(self, sess: _ClientSession, msg: Message, eff_qos: int = 0) -> None:
         if eff_qos >= 1:
@@ -212,11 +252,25 @@ class SimBroker:
 
     # ---- bridging --------------------------------------------------------
     def bridge(self, other: "SimBroker", topics: Optional[list[str]] = None,
-               bidirectional: bool = True) -> None:
+               bidirectional: bool = True, delay_s: float = 0.0,
+               jitter_s: float = 0.0, drop_p: float = 0.0,
+               clock=None, seed: int = 0) -> None:
+        """Forward matching topics to ``other`` (paper §III-F).  A bridge
+        may carry its own link model: with a ``clock`` (a
+        ``repro.api.transport.SimClock``, duck-typed — anything with
+        ``now``/``schedule``) forwards are enqueued at their modeled
+        cross-broker arrival time instead of pumping synchronously, so
+        multi-broker federations see realistic inter-region lag."""
         filters = topics or ["#"]
-        self._bridges.append((other, filters))
+        link = _BridgeLink(other, filters, delay_s, jitter_s, drop_p, clock,
+                           random.Random(f"{seed}/{self.name}->{other.name}"))
+        self._bridges.append(link)
         if bidirectional:
-            other._bridges.append((self, filters))
+            back = _BridgeLink(self, filters, delay_s, jitter_s, drop_p,
+                               clock,
+                               random.Random(
+                                   f"{seed}/{other.name}->{self.name}"))
+            other._bridges.append(back)
 
     # ---- introspection ---------------------------------------------------
     def sys_stats(self) -> dict:

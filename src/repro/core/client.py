@@ -74,6 +74,7 @@ class _SessionCtx:
     tree: Optional[dict] = None
     terminated: bool = False
     peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
+    stale_dropped: int = 0                   # late contributions discarded
 
     def acc_for(self, cluster_id: str) -> _Accumulator:
         return self.accs.setdefault(cluster_id, _Accumulator())
@@ -174,7 +175,8 @@ class SDFLMQClient:
             raise RuntimeError(f"{self.client_id}: no trainer assignment yet")
         self.fc.call(T.cluster_agg(session_id, asg.train_cluster),
                      {"params": ctx.params, "weight": ctx.weight,
-                      "sender": self.client_id, "partial": False})
+                      "sender": self.client_id, "partial": False,
+                      "round": ctx.round_idx})
 
     def wait_global_update(self, session_id: str) -> Params:
         """Synchronous in the simulated broker: delivery already happened by
@@ -191,10 +193,14 @@ class SDFLMQClient:
     def signal_ready(self, session_id: str,
                      stats: Optional[ClientStats] = None,
                      metrics: Optional[dict] = None) -> None:
-        """Round-status update to the coordinator (paper §III-E4)."""
+        """Round-status update to the coordinator (paper §III-E4), stamped
+        with the client's current round so a signal held back by the
+        network can't count toward a later round."""
         st = (stats or self.stats).to_dict()
+        ctx = self.models.sessions.get(session_id)
         self.fc.call(T.coord("client_ready"), session_id, self.client_id,
-                     st, metrics or {})
+                     st, metrics or {},
+                     round_idx=ctx.round_idx if ctx else None)
 
     # ------------------------------------------------------------------
     # Control-plane handlers
@@ -226,6 +232,11 @@ class SDFLMQClient:
             ctx.tree = body.get("tree")
             # session-wide strategy rides the retained topology broadcast
             ctx.strategy = body.get("strategy", ctx.strategy)
+            # a (re)joining client syncs its round counter from the retained
+            # topology, so its next contribution carries the live round
+            rnd = body.get("round")
+            if rnd is not None and rnd > ctx.round_idx:
+                ctx.reset_round(rnd)
         elif ev == "round_start":
             ctx.reset_round(body.get("round", ctx.round_idx))
             if self.on_round_start:
@@ -252,6 +263,13 @@ class SDFLMQClient:
         ctx = self.models.sessions.get(sid)
         duty = self.arbiter.duty_for(cluster_id)
         if ctx is None or duty is None:
+            return
+        # asynchronous delivery: a contribution held by a partition (or a
+        # straggler's QoS-1 retransmission) can arrive after its round was
+        # deadline-cut — drop it instead of polluting the current round
+        rnd = body.get("round")
+        if rnd is not None and rnd < ctx.round_idx:
+            ctx.stale_dropped += 1
             return
         strat = self._strategy_for(ctx)
         a = ctx.acc_for(cluster_id)
@@ -288,10 +306,12 @@ class SDFLMQClient:
         if duty.parent is not None:
             if strat.reduction == "stack":
                 payload = {"entries": a.entries, "weight": a.weight,
-                           "sender": self.client_id, "partial": True}
+                           "sender": self.client_id, "partial": True,
+                           "round": ctx.round_idx}
             else:
                 payload = {"params": a.acc, "weight": a.weight,
-                           "sender": self.client_id, "partial": True}
+                           "sender": self.client_id, "partial": True,
+                           "round": ctx.round_idx}
             self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
         else:
             glob, new_state = self._finalize_root(ctx, strat, a)

@@ -26,13 +26,21 @@ class CoordinatorConfig:
     aggregator_ratio: float = 0.3
     levels: int = 3
     round_deadline_s: float = 0.0
+    # virtual seconds between per-level flush broadcasts on a deadline cut,
+    # so level-l partials cross the (delayed) links before level-l+1 heads
+    # see their own flush; 0 keeps the synchronous level-by-level pump
+    flush_spacing_s: float = 0.0
 
 
 class Coordinator:
     def __init__(self, broker, cfg: Optional[CoordinatorConfig] = None,
-                 client_id: str = "coordinator"):
-        # ``broker`` is any repro.api.transport.Transport implementation
+                 client_id: str = "coordinator", clock=None):
+        # ``broker`` is any repro.api.transport.Transport implementation;
+        # ``clock`` (a repro.api.transport.SimClock) arms waiting-time and
+        # round-deadline timers on virtual time — without one, expiry stays
+        # caller-driven (expire_waiting / force_round_end)
         self.cfg = cfg or CoordinatorConfig()
+        self.clock = clock
         self.fc = MQTTFC(broker, client_id)
         self.sessions: dict[str, FLSession] = {}
         self.trees: dict[str, ClusterTree] = {}
@@ -41,6 +49,8 @@ class Coordinator:
         self.on_round_complete: Optional[Callable] = None   # hook for driver
         self.rearrangement_messages = 0     # paper's "negligible cost" claim
         self.arrangement_messages = 0
+        self.deadline_cuts = 0              # rounds ended by the deadline
+        self._pending_cut: dict[str, int] = {}   # sid -> round being cut
         # RFC bindings
         self.fc.bind(T.coord("create_session"), self._create_session)
         self.fc.bind(T.coord("join_session"), self._join_session)
@@ -66,6 +76,12 @@ class Coordinator:
                       waiting_time_s, strategy=strategy,
                       round_deadline_s=self.cfg.round_deadline_s)
         self.sessions[session_id] = s
+        if self.clock is not None:
+            s.created_at = self.clock.now
+            if 0 < waiting_time_s < float("inf"):
+                self.clock.schedule(self.clock.now + waiting_time_s,
+                                    lambda: self.expire_waiting(session_id),
+                                    timer=True)
         st = ClientStats.from_dict(stats) if stats else ClientStats(creator)
         s.join(creator, st, preferred_role)
         self._notify(creator, {"event": "session_created",
@@ -98,15 +114,40 @@ class Coordinator:
 
     def _client_ready(self, session_id: str, client_id: str,
                       stats: Optional[dict] = None,
-                      metrics: Optional[dict] = None) -> None:
+                      metrics: Optional[dict] = None,
+                      round_idx: Optional[int] = None) -> None:
         """Round-status update (paper §III-E4): client finished its role's
-        work; carries fresh system stats for the optimizer."""
+        work; carries fresh system stats for the optimizer.  ``round_idx``
+        stamps which round the client reported for — a readiness signal
+        held back by a partition (or riding a slow link) must not count
+        toward a later round."""
         s = self.sessions.get(session_id)
         if s is None or s.state != SessionState.RUNNING:
             return
+        if round_idx is not None and round_idx != s.round_idx:
+            return                           # stale readiness: discard
         st = ClientStats.from_dict(stats) if stats else None
+        first = not s.ready
         s.mark_ready(client_id, st)
+        if first and s.ready:
+            self._arm_deadline(session_id)
         if s.all_ready:
+            if self.clock is not None:
+                # everyone reported, but the aggregation cascade (partials
+                # climbing the tree, the root's global publish) may still be
+                # in flight on slower links — close the round only once the
+                # delivery queue settles, so the new round's reset doesn't
+                # orphan the old round's partials
+                rnd = s.round_idx
+                self.clock.call_when_idle(
+                    lambda: self._finish_settled_round(session_id, rnd))
+            else:
+                self._finish_round(session_id)
+
+    def _finish_settled_round(self, session_id: str, round_idx: int) -> None:
+        s = self.sessions.get(session_id)
+        if s is not None and s.state == SessionState.RUNNING \
+                and s.round_idx == round_idx and s.all_ready:
             self._finish_round(session_id)
 
     def _on_will_raw(self, topic: str, payload) -> None:
@@ -114,6 +155,16 @@ class Coordinator:
         args = payload["a"] if isinstance(payload, dict) else [payload]
         client_id = args[0] if args else topic.rsplit("/", 1)[-1]
         self.client_failed(client_id)
+
+    def _on_global_raw(self, topic: str, payload) -> None:
+        sid = topic.split("/")[2]
+        if sid not in self._pending_cut:
+            return
+        body = payload["a"][0] if isinstance(payload, dict) and "a" in payload \
+            else payload
+        rnd = body.get("round") if isinstance(body, dict) else None
+        if rnd == self._pending_cut[sid]:
+            self._close_cut_round(sid, rnd)
 
     # ------------------------------------------------------------------
     # Orchestration
@@ -141,6 +192,7 @@ class Coordinator:
         s.state = SessionState.RUNNING
         self._broadcast_status(session_id, {"event": "round_start",
                                             "round": s.round_idx})
+        self._arm_round(session_id)
 
     def _rank_aggregators(self, s: FLSession) -> list[str]:
         pol = get_policy(self.cfg.role_policy)
@@ -193,6 +245,8 @@ class Coordinator:
 
     def _finish_round(self, session_id: str) -> None:
         s = self.sessions[session_id]
+        if self._pending_cut.pop(session_id, None) is not None:
+            self.fc.unbind(T.global_model(session_id))
         s.next_round()
         if self.on_round_complete:
             self.on_round_complete(session_id, s.round_idx)
@@ -204,16 +258,78 @@ class Coordinator:
         self._arrange(session_id, rearrange=True)
         self._broadcast_status(session_id, {"event": "round_start",
                                             "round": s.round_idx})
+        self._arm_round(session_id)
+
+    def _arm_round(self, session_id: str) -> None:
+        """New round began: stamp the shared clock.  The straggler deadline
+        is *relative*: it arms when the round's first readiness report
+        lands (``_arm_deadline``), so a round whose training simply hasn't
+        started yet is never cut with zero contributions."""
+        if self.clock is not None:
+            self.sessions[session_id].round_started_at = self.clock.now
+
+    def _arm_deadline(self, session_id: str) -> None:
+        """First readiness of the round observed: every other participant
+        has ``round_deadline_s`` virtual seconds to report before the
+        coordinator cuts the round (paper §II exhaustion avoidance /
+        partial aggregation)."""
+        s = self.sessions[session_id]
+        if self.clock is None or s.round_deadline_s <= 0:
+            return
+        rnd = s.round_idx
+        self.clock.schedule(
+            self.clock.now + s.round_deadline_s,
+            lambda: self._deadline_hit(session_id, rnd), timer=True)
+
+    def _deadline_hit(self, session_id: str, round_idx: int) -> None:
+        """Round deadline elapsed on the virtual clock with stragglers still
+        missing: flush partial aggregates, then close the round once the
+        flush cascade has fully drained."""
+        s = self.sessions.get(session_id)
+        if s is None or s.state != SessionState.RUNNING \
+                or s.round_idx != round_idx or s.all_ready:
+            return
+        self.deadline_cuts += 1
+        if session_id not in self._pending_cut:
+            # observe this session's global publishes only while a cut is
+            # pending — the cut round closes the moment its (partial)
+            # global lands, and the coordinator doesn't pay for model
+            # traffic the rest of the time
+            self.fc.subscribe_raw(T.global_model(session_id),
+                                  self._on_global_raw)
+        self._pending_cut[session_id] = round_idx
+        self.force_round_end(session_id)
+        # primary close: the flushed (partial) global landing for this round
+        # (_on_global_raw); fallback: the delivery queue going fully idle —
+        # covers a cut where nothing reached the root at all
+        self.clock.call_when_idle(
+            lambda: self._close_cut_round(session_id, round_idx))
+
+    def _close_cut_round(self, session_id: str, round_idx: int) -> None:
+        s = self.sessions.get(session_id)
+        if s is not None and s.state == SessionState.RUNNING \
+                and s.round_idx == round_idx:
+            self._finish_round(session_id)
 
     def force_round_end(self, session_id: str) -> None:
-        """Straggler deadline hit: flush aggregators LEVEL BY LEVEL (each
-        publish fully drains the broker queue, so level-l partials reach
-        level-l+1 heads before their own flush arrives)."""
+        """Straggler deadline hit: flush aggregators LEVEL BY LEVEL.  With
+        no clock (or zero spacing) each publish fully drains the broker
+        queue, so level-l partials reach level-l+1 heads before their own
+        flush arrives; under a held clock with modeled latency, space the
+        levels by ``flush_spacing_s`` virtual seconds instead."""
         tree = self.trees.get(session_id)
         n_levels = len(tree.levels) if tree else 1
+        spacing = self.cfg.flush_spacing_s
         for lvl in range(n_levels):
-            self.fc.call(T.session_status(session_id),
-                         {"event": "flush", "level": lvl})
+            if self.clock is not None and spacing > 0:
+                self.clock.schedule(
+                    self.clock.now + lvl * spacing,
+                    lambda l=lvl: self.fc.call(
+                        T.session_status(session_id),
+                        {"event": "flush", "level": l}))
+            else:
+                self.fc.call(T.session_status(session_id),
+                             {"event": "flush", "level": lvl})
 
     def client_failed(self, client_id: str) -> None:
         self.failed_clients.add(client_id)

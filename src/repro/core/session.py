@@ -36,7 +36,8 @@ class FLSession:
     contributors: dict[str, ClientStats] = field(default_factory=dict)
     preferred_roles: dict[str, str] = field(default_factory=dict)
     ready: set = field(default_factory=set)
-    created_at: float = 0.0
+    created_at: float = 0.0            # SimClock stamp at creation
+    round_started_at: float = 0.0      # SimClock stamp of the current round
     round_deadline_s: float = 0.0      # straggler deadline (0 = none)
     history: list[dict] = field(default_factory=list)
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import os
 import resource
+import zlib
 from dataclasses import asdict, dataclass
 
 import numpy as np
@@ -49,7 +50,10 @@ class StatsSimulator:
 
     def sample(self, cid: str, round_idx: int) -> ClientStats:
         b = self.base[cid]
-        drift = 0.5 + 0.5 * np.sin(round_idx / 7.0 + hash(cid) % 13)
+        # stable per-client phase: str hash() is randomized per process
+        # (PYTHONHASHSEED), which would make fleets differ across runs
+        phase = zlib.crc32(cid.encode()) % 13
+        drift = 0.5 + 0.5 * np.sin(round_idx / 7.0 + phase)
         jitter = float(self.rng.uniform(0.8, 1.2))
         s = ClientStats(**b.to_dict())
         s.mem_free_mb = b.mem_total_mb * 0.4 * drift * jitter

@@ -41,14 +41,34 @@ class StragglerPolicy:
     """Deadline-based partial aggregation: after ``deadline_s`` (or a
     quantile of observed latencies), the coordinator flushes aggregators;
     FedAvg weights renormalize over the responsive subset — the update
-    stays an unbiased weighted mean of received contributions."""
+    stays an unbiased weighted mean of received contributions.
+
+    Attach a shared ``repro.api.transport.SimClock`` to read waits from
+    virtual time instead of counting them: ``round_started()`` stamps the
+    round's start and ``should_cut(got=…, expected=…)`` (no explicit
+    ``waited_s``) measures the wait on the clock."""
 
     def __init__(self, deadline_s: float = 0.0, quantile: float = 0.9,
-                 min_fraction: float = 0.5):
+                 min_fraction: float = 0.5, clock=None):
         self.deadline_s = deadline_s
         self.quantile = quantile
         self.min_fraction = min_fraction
+        self.clock = clock                  # SimClock-like: .now
+        self.round_started_at = 0.0
         self.history: list[float] = []
+
+    def attach_clock(self, clock) -> "StragglerPolicy":
+        self.clock = clock
+        return self
+
+    def round_started(self, now: float | None = None) -> None:
+        self.round_started_at = (now if now is not None
+                                 else self.clock.now if self.clock else 0.0)
+
+    def waited(self) -> float:
+        if self.clock is None:
+            return 0.0
+        return self.clock.now - self.round_started_at
 
     def observe(self, latency_s: float) -> None:
         self.history.append(latency_s)
@@ -61,7 +81,10 @@ class StragglerPolicy:
             return float("inf")
         return 1.5 * float(np.quantile(self.history, self.quantile))
 
-    def should_cut(self, waited_s: float, got: int, expected: int) -> bool:
+    def should_cut(self, waited_s: float | None = None, got: int = 0,
+                   expected: int = 0) -> bool:
+        if waited_s is None:
+            waited_s = self.waited()        # read the shared virtual clock
         if got >= expected:
             return True
         if got < self.min_fraction * expected:

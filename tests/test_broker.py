@@ -1,5 +1,8 @@
 """SimBroker unit tests: MQTT semantics SDFLMQ depends on."""
+import random
+
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.broker import Message, SimBroker, topic_matches
 
@@ -25,6 +28,68 @@ class TestTopicMatching:
     ])
     def test_matching(self, filt, topic, expected):
         assert topic_matches(filt, topic) is expected
+
+    @pytest.mark.parametrize("filt,topic,expected", [
+        # [MQTT-4.7.1-2/3] '+' is exactly one level, also at the root
+        ("+", "a", True),
+        ("+", "a/b", False),
+        ("+/+", "/finance", True),      # spec example: leading empty level
+        ("/+", "/finance", True),
+        ("+", "/finance", False),
+        ("sport/+", "sport/", True),    # empty trailing level matches '+'
+        ("sport/+", "sport", False),
+        # '#' is only valid as the last level; elsewhere it matches nothing
+        ("a/#/b", "a/x/b", False),
+        ("a/#/b", "a/#/b", False),
+        ("#/a", "x/a", False),
+        # [MQTT-4.7.2-1] topics starting '$' never match wildcard-rooted
+        # filters ($SYS stays out of '#' and '+/...' subscriptions)
+        ("#", "$SYS/broker/load", False),
+        ("+/monitor", "$SYS/monitor", False),
+        ("+/#", "$SYS/broker", False),
+        ("$SYS/#", "$SYS/broker/load", True),
+        ("$SYS/monitor/+", "$SYS/monitor/clients", True),
+        ("$SYS/broker", "$SYS/broker", True),
+    ])
+    def test_mqtt_311_spec_cases(self, filt, topic, expected):
+        assert topic_matches(filt, topic) is expected
+
+
+def _oracle(filt: str, topic: str) -> bool:
+    """Independent recursive reference of MQTT 3.1.1 §4.7 matching."""
+    f, t = filt.split("/"), topic.split("/")
+    if t[0].startswith("$") and f[0] in ("+", "#"):
+        return False
+
+    def rec(fi: int, ti: int) -> bool:
+        if fi == len(f):
+            return ti == len(t)
+        if f[fi] == "#":
+            return fi == len(f) - 1      # trailing '#' swallows the rest
+        if ti == len(t):                 # (including the parent level)
+            return False
+        if f[fi] == "+" or f[fi] == t[ti]:
+            return rec(fi + 1, ti + 1)
+        return False
+
+    return rec(0, 0)
+
+
+@settings(max_examples=300, deadline=None)
+@given(seed=st.integers(0, 10**9))
+def test_property_topic_matching_against_spec_oracle(seed):
+    """Randomized topics/filters (wildcards anywhere, empty levels, $SYS
+    roots) must agree with an independently written spec oracle."""
+    rng = random.Random(seed)
+    levels = ["a", "b", "cc", ""]
+    topic = "/".join(rng.choice(levels) for _ in range(rng.randint(1, 4)))
+    if rng.random() < 0.25:
+        topic = "$SYS/" + topic
+    parts = [rng.choice(levels + ["+"]) for _ in range(rng.randint(1, 4))]
+    if rng.random() < 0.35:
+        parts[rng.randrange(len(parts))] = "#"   # sometimes mid-filter
+    filt = "/".join(parts)
+    assert topic_matches(filt, topic) == _oracle(filt, topic)
 
 
 class TestBroker:

@@ -1,0 +1,419 @@
+"""Scenario/chaos regression suite: the virtual-time event-driven transport
+under reordering, partition-and-heal, straggler-deadline cuts, and mid-round
+churn — for both a sum-reduction strategy (fedavg) and a robust stack
+strategy (trimmed_mean).  Everything runs on fixed seeds; the matrix must be
+deterministic and fast (the whole module is in the ``scenario`` CI job)."""
+import numpy as np
+import pytest
+
+from repro.api import Federation, LatencyTransport, SimClock, scenarios
+from repro.core.broker import SimBroker
+from repro.core.mqttfc import MQTTFC
+from repro.core.stats import StatsSimulator
+
+pytestmark = pytest.mark.scenario
+
+
+# ---------------------------------------------------------------------------
+# SimClock semantics
+# ---------------------------------------------------------------------------
+
+class TestSimClock:
+    def test_events_fire_in_timestamp_order(self):
+        c, out = SimClock(), []
+        c.schedule(2.0, lambda: out.append("b"))
+        c.schedule(1.0, lambda: out.append("a"))
+        c.schedule(3.0, lambda: out.append("c"))
+        c.run_until_idle()
+        assert out == ["a", "b", "c"]
+        assert c.now == 3.0
+
+    def test_same_time_is_fifo(self):
+        c, out = SimClock(), []
+        for i in range(5):
+            c.schedule(1.0, lambda i=i: out.append(i))
+        c.run_until_idle()
+        assert out == [0, 1, 2, 3, 4]
+
+    def test_events_can_schedule_events(self):
+        c, out = SimClock(), []
+
+        def cascade():
+            out.append("first")
+            c.schedule(c.now + 1.0, lambda: out.append("second"))
+
+        c.schedule(1.0, cascade)
+        c.run_until_idle()
+        assert out == ["first", "second"] and c.now == 2.0
+
+    def test_advance_to_respects_limit_and_fires_timers(self):
+        c, out = SimClock(), []
+        c.schedule(1.0, lambda: out.append("m1"))
+        c.schedule(1.5, lambda: out.append("t"), timer=True)
+        c.schedule(2.0, lambda: out.append("m2"))
+        c.advance_to(1.6)
+        assert out == ["m1", "t"] and c.now == 1.6
+        c.advance_to(5.0)
+        assert out == ["m1", "t", "m2"]
+
+    def test_run_until_idle_leaves_timers_armed(self):
+        c, out = SimClock(), []
+        c.schedule(0.5, lambda: out.append("timer"), timer=True)
+        c.schedule(1.0, lambda: out.append("msg"))
+        c.run_until_idle()
+        assert out == ["msg"]
+        c.advance(0.0)           # explicit time control fires the late timer
+        assert out == ["msg", "timer"]
+
+    def test_cancel(self):
+        c, out = SimClock(), []
+        ev = c.schedule(1.0, lambda: out.append("x"))
+        ev.cancel()
+        c.run_until_idle()
+        assert out == [] and c.pending() == 0
+
+    def test_call_when_idle_waits_for_message_queue(self):
+        c, out = SimClock(), []
+        c.schedule(1.0, lambda: out.append("m"))
+        c.call_when_idle(lambda: out.append("idle"))
+        c.run_until_idle()
+        assert out == ["m", "idle"]
+
+    def test_time_never_flows_backwards(self):
+        c = SimClock(now=5.0)
+        ev = c.schedule(1.0, lambda: None)    # past: clamped to now
+        assert ev.time == 5.0
+        c.run_until_idle()
+        assert c.now == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Genuine reordering (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_transport_reorders_under_asymmetric_delay():
+    """Two messages published A,B arrive B,A when A's link is slower."""
+    clock = SimClock()
+    lt = LatencyTransport(SimBroker(), clock=clock)
+    lt.set_link("A", delay_s=0.5)
+    lt.set_link("B", delay_s=0.05)
+    got = []
+    lt.connect("rx", lambda m: got.append(m.payload))
+    lt.subscribe("rx", "t/#", qos=1)
+    with clock.hold():
+        lt.publish("t/m", b"from-A", qos=1, sender="A")
+        lt.publish("t/m", b"from-B", qos=1, sender="B")
+        assert got == []                       # queued, not delivered
+        clock.run_until_idle()
+    assert got == [b"from-B", b"from-A"]       # B overtook A
+    assert clock.now == pytest.approx(0.5)
+
+
+def test_round_reorders_updates_and_still_aggregates_both():
+    """Session-level acceptance: c0's update is published first but arrives
+    last; the round's global is still the exact mean of every update."""
+    fed = Federation(aggregator_ratio=0.5)
+    fed.transport.set_link("c0", delay_s=0.3)      # slow uplink
+    clients = [fed.client(f"c{i}") for i in range(3)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients)
+
+    arrivals = []
+    probe = MQTTFC(fed.transport, "probe")
+    probe.subscribe_raw(
+        "sdflmq/session/+/cluster/+/agg",
+        lambda t, p: (not p["a"][0].get("partial")
+                      and arrivals.append(p["a"][0]["sender"])))
+
+    params = {f"c{i}": {"w": np.full(4, float(i), np.float32)}
+              for i in range(3)}
+    report = scenarios.play(session, lambda cid, g, r: (params[cid], 1),
+                            rounds=1, round_time_s=1.0)
+    assert arrivals[0] != "c0" and arrivals[-1] == "c0"   # published first,
+    assert sorted(arrivals) == ["c0", "c1", "c2"]          # arrived last
+    want = np.mean([params[c]["w"] for c in params], axis=0)
+    np.testing.assert_allclose(session.global_params()["w"], want, rtol=1e-6)
+    assert report.final_state == "terminated" and not report.stalled
+
+
+def test_qos1_retransmission_arrives_late_not_just_billed():
+    """A drawn drop on a QoS-1 link means the message arrives at 2x latency
+    — genuinely after a message sent later on a clean link."""
+    clock = SimClock()
+    lt = LatencyTransport(SimBroker(), clock=clock, seed=3)
+    lt.set_link("lossy", delay_s=0.1, drop_p=1.0)
+    lt.set_link("clean", delay_s=0.15)
+    got = []
+    lt.connect("rx", lambda m: got.append(m.payload))
+    lt.subscribe("rx", "t/#", qos=1)
+    with clock.hold():
+        lt.publish("t/m", b"lossy-first", qos=1, sender="lossy")
+        lt.publish("t/m", b"clean-second", qos=1, sender="clean")
+        clock.run_until_idle()
+    assert got == [b"clean-second", b"lossy-first"]   # 0.15 < 0.2
+    assert lt.sys_stats()["links"]["lossy"]["retransmits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Partitions
+# ---------------------------------------------------------------------------
+
+def test_partition_holds_until_heal():
+    clock = SimClock()
+    lt = LatencyTransport(SimBroker(), clock=clock)
+    got = []
+    lt.connect("rx", lambda m: got.append(m.payload))
+    lt.subscribe("rx", "t/#", qos=1)
+    lt.connect("tx", lambda m: None)
+    lt.partition(["tx"], ["rx"])
+    lt.publish("t/m", b"held", qos=1, sender="tx")
+    assert got == [] and lt.partition_held == 1
+    lt.publish("t/m", b"lost", qos=0, sender="tx")
+    assert lt.partition_dropped == 1               # QoS 0 across the cut dies
+    lt.heal()
+    assert got == [b"held"]                        # QoS 1 waited for heal
+
+    # ungrouped actors keep connectivity both ways
+    lt.partition(["tx"], ["other"])
+    lt.publish("t/m", b"through", qos=1, sender="tx")
+    assert got == [b"held", b"through"]
+
+
+def test_partition_and_heal_session_reconverges():
+    """Rounds keep completing during a client-group partition (the
+    coordinator stays reachable); held contributions from the partition
+    window are stale-dropped after heal instead of corrupting later
+    rounds, and the post-heal global re-includes both groups."""
+    n, rounds = 6, 6
+    fed = Federation(latency=dict(delay_s=0.01, seed=11), aggregator_ratio=0.4)
+    sim = StatsSimulator([f"c{i}" for i in range(n)], seed=5)
+    clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0))
+               for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients)
+    groups = [[f"c{i}" for i in range(3)], [f"c{i}" for i in range(3, n)]]
+    # per-client constant updates: group A avg = 1.0, group B avg = 4.0
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(n)}
+    versions = []
+    session.on_global_update = lambda p, v: versions.append(
+        (v, float(np.mean(p["w"]))))
+
+    report = scenarios.play(
+        session, lambda cid, g, r: (params[cid], 1),
+        events=[scenarios.partition(groups, t0=1.5, t1=3.5)],
+        rounds=rounds, round_time_s=1.0)
+
+    assert report.final_state == "terminated" and not report.stalled
+    assert report.partition_held > 0
+    g = session.global_params()["w"]
+    assert np.isfinite(g).all()
+    # after heal the global is again the all-client mean
+    np.testing.assert_allclose(g, np.mean([p["w"] for p in params.values()],
+                                          axis=0), rtol=1e-5)
+    assert report.stale_dropped > 0      # held traffic was discarded, not
+    assert versions[-1][0] >= 4          # folded into a later round
+
+
+# ---------------------------------------------------------------------------
+# Straggler deadline cut
+# ---------------------------------------------------------------------------
+
+def test_deadline_cut_excludes_straggler_and_round_completes():
+    n = 5
+    fed = Federation(latency=dict(delay_s=0.01, seed=1), aggregator_ratio=0.4,
+                     round_deadline_s=0.5, flush_spacing_s=0.05)
+    sim = StatsSimulator([f"c{i}" for i in range(n)], seed=5)
+    # pin the straggler to a leaf-trainer role so the cut removes exactly
+    # its contribution (a straggling *head* would cost its whole subtree)
+    clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0),
+                          preferred_role="trainer" if i == n - 1
+                          else "aggregator")
+               for i in range(n)]
+    session = fed.create_session("s", "m", rounds=2, participants=clients)
+    fed.transport.set_link("c4", delay_s=2.0)      # way past the deadline
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(n)}
+    seen = []
+    session.on_global_update = lambda p, v: seen.append(np.array(p["w"]))
+
+    report = scenarios.play(session, lambda cid, g, r: (params[cid], 1),
+                            rounds=2, round_time_s=1.0)
+    assert report.deadline_cuts >= 1
+    assert report.final_state == "terminated" and not report.stalled
+    # the cut round's global renormalizes over the responsive subset
+    live = [params[f"c{i}"]["w"] for i in range(n - 1)]
+    np.testing.assert_allclose(seen[0], np.mean(live, axis=0), rtol=1e-5)
+    assert all(np.isfinite(g).all() for g in seen)
+
+
+# ---------------------------------------------------------------------------
+# The scenario matrix (headline deliverable)
+# ---------------------------------------------------------------------------
+
+def _matrix_session(strategy, n=6, rounds=5, **fed_kw):
+    fed_kw.setdefault("latency", dict(delay_s=0.01, jitter_s=0.005, seed=42))
+    fed = Federation(aggregator_ratio=0.4, **fed_kw)
+    sim = StatsSimulator([f"c{i}" for i in range(n + 2)], seed=9)
+    clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0))
+               for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients, strategy=strategy,
+                                 capacity=(n, n + 2))
+    session.start()
+    return fed, session
+
+
+def _matrix_events(kind, fed, n):
+    if kind == "reorder":
+        for i in range(n):                      # reversed arrival order
+            fed.transport.set_link(f"c{i}", delay_s=0.01 * (n - i))
+        return []
+    if kind == "partition_heal":
+        return [scenarios.partition(
+            [[f"c{i}" for i in range(n // 2)],
+             [f"c{i}" for i in range(n // 2, n)]], t0=1.5, t1=3.5)]
+    if kind == "deadline_cut":
+        fed.transport.set_link("c5", delay_s=2.0)
+        return []
+    if kind == "churn":
+        return [scenarios.churn(fail_at={1: ["c5"]},
+                                join_at={3: ["c6"]},
+                                straggle_at={2: {"c1": 0.3}})]
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "trimmed_mean"])
+@pytest.mark.parametrize("kind", ["reorder", "partition_heal",
+                                  "deadline_cut", "churn"])
+def test_scenario_matrix_completes_with_finite_globals(kind, strategy):
+    rounds = 5
+    fed_kw = {}
+    if kind == "deadline_cut":
+        fed_kw = dict(round_deadline_s=0.5, flush_spacing_s=0.05)
+    fed, session = _matrix_session(strategy, rounds=rounds, **fed_kw)
+    events = _matrix_events(kind, fed, n=6)
+
+    rng = np.random.default_rng(17)
+    drift = {f"c{i}": rng.normal(size=(4,)).astype(np.float32)
+             for i in range(8)}
+
+    def train(cid, g, r):
+        base = np.zeros(4, np.float32) if g is None else np.asarray(g["w"])
+        upd = drift.get(cid, np.zeros(4, np.float32))
+        return {"w": (base + upd).astype(np.float32)}, 1 + int(cid[1:])
+
+    report = scenarios.play(session, train, events=events, rounds=rounds,
+                            round_time_s=1.0,
+                            initial_params={"w": np.zeros(4, np.float32)})
+    assert not report.stalled
+    assert report.final_state == "terminated"
+    assert report.rounds_completed == rounds
+    g = session.global_params()
+    assert g is not None and np.isfinite(g["w"]).all()
+    if kind == "churn":
+        assert "c5" not in session.contributors()
+        assert "c6" in session.contributors()
+
+
+def test_scenario_runs_are_deterministic():
+    """Same seeds, same scenario -> bit-identical globals and identical
+    report counters (per-link RNG streams, virtual-time event order)."""
+    def run():
+        fed, session = _matrix_session("fedavg", rounds=4)
+        events = _matrix_events("partition_heal", fed, n=6)
+        params = {f"c{i}": {"w": np.full(4, float(i) + 0.25, np.float32)}
+                  for i in range(6)}
+        report = scenarios.play(session, lambda c, g, r: (params[c], 1),
+                                events=events, rounds=4, round_time_s=1.0)
+        return (session.global_params()["w"], report.partition_held,
+                report.stale_dropped, report.virtual_time_s,
+                session.global_version())
+    g1, held1, stale1, t1, v1 = run()
+    g2, held2, stale2, t2, v2 = run()
+    np.testing.assert_array_equal(g1, g2)
+    assert (held1, stale1, t1, v1) == (held2, stale2, t2, v2)
+
+
+def test_zero_delay_event_path_is_bit_identical_to_immediate_pump():
+    """Acceptance: with all link models at zero delay/jitter/loss, draining
+    a held queue produces bit-identical globals to the auto-pump path."""
+    n = 7
+    rng = np.random.default_rng(0)
+    params = {f"c{i}": {"w": rng.normal(size=(8, 2)).astype(np.float32)}
+              for i in range(n)}
+    weights = {f"c{i}": float(rng.integers(1, 30)) for i in range(n)}
+
+    def run(held):
+        fed = Federation(aggregator_ratio=0.4)
+        clients = [fed.client(f"c{i}") for i in range(n)]
+        session = fed.create_session("s", "m", rounds=1,
+                                     participants=clients)
+        train = lambda cid, g, r: (params[cid], int(weights[cid]))
+        if held:
+            with fed.clock.hold():
+                session.run_round_async(train)
+                fed.clock.run_until_idle()
+        else:
+            session.run_round(train)
+        return session.global_params()["w"]
+
+    np.testing.assert_array_equal(run(held=False), run(held=True))
+
+
+# ---------------------------------------------------------------------------
+# Cross-broker bridge lag
+# ---------------------------------------------------------------------------
+
+def test_bridge_link_model_delays_cross_broker_traffic():
+    clock = SimClock()
+    b1, b2 = SimBroker("b1"), SimBroker("b2")
+    b1.bridge(b2, ["shared/#"], delay_s=0.25, clock=clock)
+    local_t, remote_t = [], []
+    b1.connect("c1", lambda m: local_t.append(clock.now))
+    b1.subscribe("c1", "shared/x")
+    b2.connect("c2", lambda m: remote_t.append(clock.now))
+    b2.subscribe("c2", "shared/x")
+    b1.publish("shared/x", b"p")
+    assert local_t == [0.0] and remote_t == []     # in flight cross-broker
+    clock.run_until_idle()
+    assert remote_t == [pytest.approx(0.25)]
+    assert b1.sys_stats()["bridge_forwards"] == 1
+
+
+def test_bridge_drop_retransmits_qos1_and_loses_qos0():
+    """The bridge honors QoS like a link: a drawn drop loses QoS-0 traffic
+    but retransmits QoS-1 (arriving at 2x the bridge delay)."""
+    clock = SimClock()
+    b1, b2 = SimBroker("b1"), SimBroker("b2")
+    b1.bridge(b2, ["t/#"], delay_s=0.1, drop_p=1.0, clock=clock)
+    got = []
+    b2.connect("c2", lambda m: got.append((m.payload, clock.now)))
+    b2.subscribe("c2", "t/x", qos=1)
+    b1.publish("t/x", b"q0", qos=0)
+    b1.publish("t/x", b"q1", qos=1)
+    clock.run_until_idle()
+    assert got == [(b"q1", pytest.approx(0.2))]    # late, but delivered
+    link = b1._bridges[0]
+    assert link.dropped == 1 and link.retransmitted == 1
+
+
+def test_bridged_federation_sees_cross_broker_lag():
+    """Two bridged brokers under one clock: a round on broker A completes,
+    and broker B's mirror of the global model arrives a bridge-delay later
+    on the shared virtual clock."""
+    clock = SimClock()
+    b1, b2 = SimBroker("b1"), SimBroker("b2")
+    b1.bridge(b2, ["sdflmq/session/+/global"], delay_s=0.5, clock=clock)
+    fed = Federation(transport=LatencyTransport(b1, clock=clock,
+                                                delay_s=0.01))
+    local, mirror = [], []
+    b1.connect("local_obs", lambda m: local.append(clock.now))
+    b1.subscribe("local_obs", "sdflmq/session/+/global")
+    b2.connect("observer", lambda m: mirror.append(clock.now))
+    b2.subscribe("observer", "sdflmq/session/+/global")
+    clients = [fed.client(f"c{i}") for i in range(3)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients)
+    p = {"w": np.ones(3, np.float32)}
+    session.run_round(lambda cid, g, r: (p, 1))
+    assert local and mirror                # both regions saw the global...
+    assert mirror[0] >= local[0] + 0.5 - 1e-9   # ...B a bridge-delay later
