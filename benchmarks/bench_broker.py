@@ -63,6 +63,31 @@ def bench_compression():
     return ("mqttfc_compression", out["zlib"]["us"], out)
 
 
+def bench_fanout_1k(n_subs: int = 1000, n_msgs: int = 200):
+    """Many-subscriber routing: 1k clients x 3 filters (exact, ``+``
+    wildcard, shared ``#`` broadcast).  The pre-trie broker paid an
+    O(clients x filters) ``topic_matches`` scan per publish; the trie +
+    per-topic match cache makes routing O(topic levels)."""
+    b = SimBroker()
+    sink = [0]
+    for i in range(n_subs):
+        b.connect(f"c{i}", lambda m: sink.__setitem__(0, sink[0] + 1))
+        # mixed filter shapes: exact, single-level wildcard, deep wildcard
+        b.subscribe(f"c{i}", f"t/{i}/x")
+        b.subscribe(f"c{i}", f"t/{i}/+")
+        b.subscribe(f"c{i}", "bcast/#")
+    payload = b"x" * 256
+    t0 = time.perf_counter()
+    for i in range(n_msgs):
+        b.publish(f"t/{i % n_subs}/x", payload)
+    for i in range(n_msgs):
+        b.publish("bcast/all", payload)
+    dt = time.perf_counter() - t0
+    return ("broker_fanout_1k", dt / (2 * n_msgs) * 1e6,
+            {"subs": 3 * n_subs, "msgs_per_s": round(2 * n_msgs / dt),
+             "deliveries": sink[0]})
+
+
 def bench_latency_transport_overhead(n_msgs: int = 20000):
     """Decoration cost of the per-link latency model on the hot path."""
     b = LatencyTransport(SimBroker(), delay_s=0.01, jitter_s=0.005)
@@ -126,6 +151,7 @@ def bench_rearrangement_cost(n_clients: int = 32, rounds: int = 10):
 
 def run(verbose: bool = True):
     rows = [bench_raw_throughput(), bench_batching(), bench_compression(),
+            bench_fanout_1k(),
             bench_latency_transport_overhead(), bench_event_queue(),
             bench_rearrangement_cost()]
     if verbose:

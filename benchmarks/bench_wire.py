@@ -1,0 +1,134 @@
+"""Data-plane microbenchmarks for the zero-copy TensorBundle wire format:
+serialize/deserialize vs the legacy msgpack-ExtType codec, streaming
+in-place aggregation vs legacy float64-dict weighted_add, and an
+end-to-end federated round on each wire format."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.api import Federation
+from repro.core import mqttfc as F
+from repro.core import wire
+from repro.core.client import _Accumulator, weighted_add
+from repro.core.wire import TensorBundle
+
+SMOKE = bool(int(os.environ.get("SMOKE", "0")))
+
+
+def _model(mb: float = 4.0) -> dict:
+    n = int(mb * 2**20 // 4 // 2)
+    rng = np.random.default_rng(0)
+    return {"w": rng.normal(size=(n // 256, 256)).astype(np.float32),
+            "b": rng.normal(size=n).astype(np.float32)}
+
+
+def bench_serialize(mb: float = 4.0, reps: int = 5):
+    """Flatten-once TensorBundle encode+decode vs legacy msgpack ExtType."""
+    params = _model(mb)
+    obj = {"params": params, "weight": 3.0}
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        body = wire.encode_body(
+            {"params": TensorBundle.from_params(params), "weight": 3.0})
+        back = wire.decode_body(body)
+        back["params"].views()
+    dt_tb = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        F.decode(F.encode(obj))
+    dt_leg = (time.perf_counter() - t0) / reps
+    return ("wire_serialize", dt_tb * 1e6,
+            {"payload_mb": mb, "tb_ms": round(dt_tb * 1e3, 2),
+             "legacy_ms": round(dt_leg * 1e3, 2),
+             "speedup_x": round(dt_leg / dt_tb, 1)})
+
+
+def bench_aggregate(mb: float = 4.0, n_contrib: int = 16, reps: int = 3):
+    """Streaming in-place flat accumulate vs legacy float64-dict
+    weighted_add, over the accumulator's real lifecycle: one duty, many
+    rounds (``restart`` keeps the preallocated buffers).  Every
+    contribution is a distinct buffer, as on the wire.  Measured for
+    weighted leaf sums (w=k) and for the tree's partial-sum merges
+    (w=1.0: a single fused cast-add pass)."""
+    dicts = []
+    rng = np.random.default_rng(0)
+    base = _model(mb)
+    for _ in range(n_contrib):
+        dicts.append({k: v + rng.standard_normal(1).astype(v.dtype)
+                      for k, v in base.items()})
+    bundles = [TensorBundle.from_params(d) for d in dicts]
+    acc = _Accumulator()
+
+    def tb_round(w_of):
+        acc.restart()
+        for i, b in enumerate(bundles):
+            acc.add_sum(b, w_of(i))
+            acc.received += 1
+
+    def leg_round(w_of):
+        ref = None
+        for i, d in enumerate(dicts):
+            ref = weighted_add(ref, d, w_of(i))
+        return ref
+
+    out = {}
+    for label, w_of in (("weighted", lambda i: float(i + 1)),
+                        ("partial_merge", lambda i: 1.0)):
+        tb_round(w_of); leg_round(w_of)       # warm allocator/pages
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            tb_round(w_of)
+        dt_tb = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            leg_round(w_of)
+        dt_leg = (time.perf_counter() - t0) / reps
+        out[label] = (dt_tb, dt_leg)
+    dt_tb, dt_leg = out["weighted"]
+    dt_tb_p, dt_leg_p = out["partial_merge"]
+    return ("wire_aggregate", dt_tb * 1e6,
+            {"payload_mb": mb, "contribs": n_contrib,
+             "tb_ms": round(dt_tb * 1e3, 2),
+             "legacy_ms": round(dt_leg * 1e3, 2),
+             "speedup_x": round(dt_leg / dt_tb, 1),
+             "partial_tb_ms": round(dt_tb_p * 1e3, 2),
+             "partial_legacy_ms": round(dt_leg_p * 1e3, 2),
+             "partial_speedup_x": round(dt_leg_p / dt_tb_p, 1)})
+
+
+def bench_e2e_round(n_clients: int = 8, mb: float = 1.0):
+    """One full federated round (train -> tree aggregate -> global) on each
+    wire format; same model, same tree."""
+    params = _model(mb)
+    out = {}
+    for fmt in ("tb", "legacy"):
+        fed = Federation(levels=3, aggregator_ratio=0.4, wire_format=fmt)
+        clients = [fed.client(f"c{i}") for i in range(n_clients)]
+        session = fed.create_session("s", "m", rounds=2,
+                                     participants=clients)
+        session.run_round(lambda cid, g, r: (params, 1))   # warmup round
+        t0 = time.perf_counter()
+        session.run_round(lambda cid, g, r: (params, 1))
+        out[fmt] = time.perf_counter() - t0
+    return ("wire_e2e_round", out["tb"] * 1e6,
+            {"clients": n_clients, "payload_mb": mb,
+             "tb_ms": round(out["tb"] * 1e3, 1),
+             "legacy_ms": round(out["legacy"] * 1e3, 1),
+             "speedup_x": round(out["legacy"] / out["tb"], 1)})
+
+
+def run(verbose: bool = True):
+    mb = 1.0 if SMOKE else 4.0
+    rows = [bench_serialize(mb=mb), bench_aggregate(mb=mb),
+            bench_e2e_round(mb=0.5 if SMOKE else 1.0)]
+    if verbose:
+        for name, us, d in rows:
+            print(f"  {name}: {d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,18 +1,32 @@
 """Benchmark runner: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (plus per-bench detail)."""
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench detail).
+
+``--json PATH`` additionally dumps every row as a JSON artifact (the CI
+smoke job uploads this as ``BENCH_pr3.json`` so the perf trajectory is
+tracked per PR).  ``SMOKE=1`` shrinks payload sizes for CI.
+"""
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import sys
 import traceback
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 from benchmarks import (bench_broker, bench_convergence, bench_kernels,
-                        bench_memory, bench_schedules, bench_topology)
+                        bench_memory, bench_schedules, bench_topology,
+                        bench_wire)
 
 SUITES = [
     ("fig7_convergence", bench_convergence),
     ("fig8_topology", bench_topology),
     ("broker_load", bench_broker),
+    ("wire_data_plane", bench_wire),
     ("aggregator_memory", bench_memory),
     ("kernels", bench_kernels),
     ("schedules", bench_schedules),
@@ -20,9 +34,18 @@ SUITES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write all rows to this JSON file")
+    ap.add_argument("--suite", default=None,
+                    help="run only the named suite")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: dict[str, dict] = {}
     for suite_name, mod in SUITES:
+        if args.suite and suite_name != args.suite:
+            continue
         print(f"# --- {suite_name} ---", file=sys.stderr)
         try:
             rows = mod.run(verbose=True)
@@ -32,6 +55,11 @@ def main() -> None:
             rows = [(suite_name + "_FAILED", 0.0, {"error": str(e)[:200]})]
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{json.dumps(derived)}")
+            all_rows.setdefault(name, {"us": round(us, 1), **derived})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

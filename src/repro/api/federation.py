@@ -58,7 +58,15 @@ class Federation:
                  round_deadline_s: float = 0.0,
                  flush_spacing_s: float = 0.0,
                  clock: Optional[SimClock] = None,
-                 coordinator_cfg: Optional[CoordinatorConfig] = None):
+                 coordinator_cfg: Optional[CoordinatorConfig] = None,
+                 wire_format: str = "tb",
+                 uplink_codec: Optional[str] = None):
+        #: model-plane wire format for clients created via ``client()``:
+        #: "tb" = zero-copy TensorBundle (default), "legacy" = msgpack
+        #: ExtType (bit-identity fallback).  ``uplink_codec="int8_ef"``
+        #: turns on int8+error-feedback quantized leaf uplinks.
+        self.wire_format = wire_format
+        self.uplink_codec = uplink_codec
         transport = transport if transport is not None else SimBroker()
         if not isinstance(transport, LatencyTransport):
             transport = LatencyTransport(transport, clock=clock or SimClock(),
@@ -102,7 +110,8 @@ class Federation:
         if client_id not in self.clients:
             self.clients[client_id] = SDFLMQClient(
                 client_id, self.transport, preferred_role=preferred_role,
-                stats=stats)
+                stats=stats, wire_format=self.wire_format,
+                uplink_codec=self.uplink_codec)
         return self.clients[client_id]
 
     def create_session(self, session_id: str, model_name: str, rounds: int,

@@ -63,6 +63,121 @@ def topic_matches(topic_filter: str, topic: str) -> bool:
     return len(f_parts) == len(t_parts)
 
 
+class _TrieNode:
+    __slots__ = ("children", "values", "hash_values")
+
+    def __init__(self):
+        self.children: dict[str, _TrieNode] = {}
+        self.values: dict = {}       # value -> insertion seq (exact end)
+        self.hash_values: dict = {}  # value -> seq ('#' at this level)
+
+
+class TopicTrie:
+    """Subscription trie with a per-topic match cache.
+
+    ``insert``/``remove`` take a topic filter and an opaque hashable value;
+    ``match(topic)`` returns matching values ordered by first insertion —
+    the same tie-break a linear scan over insertion-ordered subscriptions
+    produces.  Matches are memoized per concrete topic; any mutation
+    invalidates the cache (subscribe/unsubscribe are rare, publishes are
+    the hot path).  The MQTT-4.7.2-1 ``$``-topic rule is honored: filters
+    beginning with a wildcard never match topics whose first level starts
+    with ``$``.
+    """
+
+    __slots__ = ("_root", "_seq", "_cache", "size")
+
+    def __init__(self):
+        self._root = _TrieNode()
+        self._seq = itertools.count()
+        self._cache: dict[str, tuple] = {}
+        self.size = 0
+
+    def insert(self, topic_filter: str, value) -> None:
+        node = self._root
+        for part in topic_filter.split("/"):
+            if part == "#":
+                if value not in node.hash_values:
+                    node.hash_values[value] = next(self._seq)
+                    self.size += 1
+                self._cache.clear()
+                return
+            node = node.children.setdefault(part, _TrieNode())
+        if value not in node.values:
+            node.values[value] = next(self._seq)
+            self.size += 1
+        self._cache.clear()
+
+    def remove(self, topic_filter: str, value) -> None:
+        # walk down, then prune empty nodes on the way back up
+        node = self._root
+        path = []
+        parts = topic_filter.split("/")
+        for i, part in enumerate(parts):
+            if part == "#":
+                if node.hash_values.pop(value, None) is not None:
+                    self.size -= 1
+                    self._cache.clear()
+                break
+            nxt = node.children.get(part)
+            if nxt is None:
+                return
+            path.append((node, part))
+            node = nxt
+        else:
+            if node.values.pop(value, None) is not None:
+                self.size -= 1
+                self._cache.clear()
+        for parent, part in reversed(path):
+            child = parent.children[part]
+            if child.children or child.values or child.hash_values:
+                break
+            del parent.children[part]
+
+    def match(self, topic: str) -> tuple:
+        """Values whose filter matches ``topic``, ordered by insertion."""
+        hit = self._cache.get(topic)
+        if hit is not None:
+            return hit
+        parts = topic.split("/")
+        found: dict = {}          # value -> min seq
+        sys_topic = parts[0].startswith("$")
+
+        def _collect(vals):
+            for v, s in vals.items():
+                if v not in found or s < found[v]:
+                    found[v] = s
+
+        def _walk(node: _TrieNode, i: int, root_wild_ok: bool):
+            if node.hash_values and (root_wild_ok or i > 0):
+                _collect(node.hash_values)
+            if i == len(parts):
+                _collect(node.values)
+                return
+            nxt = node.children.get(parts[i])
+            if nxt is not None:
+                _walk(nxt, i + 1, root_wild_ok)
+            if i > 0 or root_wild_ok:
+                plus = node.children.get("+")
+                if plus is not None:
+                    _walk(plus, i + 1, root_wild_ok)
+
+        # at the root level, wildcard branches ('+'/'#') are skipped for
+        # $-topics; an exact first level starting with '$' still matches
+        if sys_topic:
+            nxt = self._root.children.get(parts[0])
+            if nxt is not None:
+                _walk(nxt, 1, False)
+        else:
+            _walk(self._root, 0, True)
+        out = tuple(sorted(found, key=found.get))
+        self._cache[topic] = out
+        return out
+
+    def invalidate(self) -> None:
+        self._cache.clear()
+
+
 @dataclass
 class _ClientSession:
     client_id: str
@@ -148,6 +263,9 @@ class SimBroker:
         self._queue: deque = deque()
         self._pumping = False
         self._bridges: list[_BridgeLink] = []
+        # subscription trie: value = (client_id, filter); match(topic) is
+        # O(topic levels), memoized per topic, invalidated on sub changes
+        self._trie = TopicTrie()
         self.stats = SysStats()
         self.delivery_log: list[tuple[str, str, int]] = []  # (topic, client, size)
         self.log_deliveries = False
@@ -155,6 +273,10 @@ class SimBroker:
     # ---- connection lifecycle -------------------------------------------
     def connect(self, client_id: str, on_message: Callable[[Message], None],
                 will: Optional[Message] = None) -> _ClientSession:
+        old = self._clients.get(client_id)
+        if old is not None:        # reconnect: the old session's subs die
+            for filt in old.subscriptions:
+                self._trie.remove(filt, (client_id, filt))
         sess = _ClientSession(client_id, on_message, will)
         self._clients[client_id] = sess
         return sess
@@ -164,6 +286,8 @@ class SimBroker:
         if sess is None:
             return
         sess.connected = False
+        for filt in sess.subscriptions:
+            self._trie.remove(filt, (client_id, filt))
         if not graceful and sess.will is not None:
             self.publish(sess.will.topic, sess.will.payload,
                          qos=sess.will.qos, retain=sess.will.retain)
@@ -172,13 +296,18 @@ class SimBroker:
     def subscribe(self, client_id: str, topic_filter: str, qos: int = 0) -> None:
         sess = self._clients[client_id]
         sess.subscriptions[topic_filter] = qos
+        self._trie.insert(topic_filter, (client_id, topic_filter))
         # retained delivery
         for topic, msg in list(self._retained.items()):
             if topic_matches(topic_filter, topic):
                 self._deliver(sess, msg)
 
     def unsubscribe(self, client_id: str, topic_filter: str) -> None:
-        self._clients[client_id].subscriptions.pop(topic_filter, None)
+        sess = self._clients.get(client_id)
+        if sess is None:
+            return
+        if sess.subscriptions.pop(topic_filter, None) is not None:
+            self._trie.remove(topic_filter, (client_id, topic_filter))
 
     def subscriptions_of(self, client_id: str) -> list[str]:
         return list(self._clients[client_id].subscriptions)
@@ -218,14 +347,19 @@ class SimBroker:
             else:
                 self._retained.pop(msg.topic, None)
         matched = False
-        for sess in list(self._clients.values()):
-            if not sess.connected:
+        seen: set[str] = set()      # first matching filter per client wins
+        for client_id, filt in self._trie.match(msg.topic):
+            if client_id in seen:
                 continue
-            for filt, sub_qos in sess.subscriptions.items():
-                if topic_matches(filt, msg.topic):
-                    self._deliver(sess, msg, min(msg.qos, sub_qos))
-                    matched = True
-                    break
+            seen.add(client_id)
+            sess = self._clients.get(client_id)
+            if sess is None or not sess.connected:
+                continue
+            sub_qos = sess.subscriptions.get(filt)
+            if sub_qos is None:
+                continue
+            self._deliver(sess, msg, min(msg.qos, sub_qos))
+            matched = True
         if not matched:
             self.stats.dropped_no_subscriber += 1
         # bridge forwarding with loop prevention

@@ -7,23 +7,33 @@ carry a strategy name, and every aggregator applies the same strategy hooks
 the compiled collective path uses (core/aggregation.py).
 
 "sum"-reduction strategies (fedavg, fedprox, fedadam) move *weighted
-partial sums* up the cluster tree through MQTTFC — mathematically identical
-to flat aggregation (property-tested).  A trainer publishes its raw model
-into its leaf cluster's topic; cluster heads (which subscribe to their own
-topic, so their own model self-delivers) accumulate ``expected`` inputs and
-forward the partial sum to the parent cluster; the root finalizes once and
-publishes the global model (retained).
+partial sums* up the cluster tree through MQTTFC.  The aggregation service
+is **streaming and in-place**: each duty holds ONE preallocated flat
+float64 accumulator (plus a reusable scratch buffer) and applies
+``np.multiply(view, w, out=scratch); np.add(acc, scratch, out=acc)`` —
+no per-contribution float64 dicts are ever allocated, and a head forwards
+its partial sum by re-framing the accumulator buffer (zero re-serialization
+of the leaves).  The fused path is bit-identical to the legacy
+``acc + asarray(v, float64) * w`` semantics (property-tested).
 
 "stack"-reduction strategies (trimmed_mean, coordinate_median) are not
-decomposable into partial sums, so heads forward their collected
-contributions unchanged; the root stacks everything and applies the robust
-combine — permutation-invariant, hence bit-identical to the flat reference
-no matter the tree shape.
+decomposable into partial sums; contributions are appended as flat rows
+into one growing row buffer.  Heads forward the collected rows as a single
+``TensorStack`` slice (one memcpy into the frame, leaves never
+re-serialized) and the root builds per-tensor ``(n, ...)`` *strided views*
+over the row buffer — no per-key ``np.stack`` duplicate — before applying
+the robust combine.  Permutation invariance keeps the tree result
+bit-identical to the flat reference no matter the tree shape.
+
+An opt-in int8 + error-feedback uplink codec (``uplink_codec="int8_ef"``)
+quantizes leaf updates with the same per-row absmax scheme as the compiled
+``compressed`` schedule (repro.dist.compression), carrying the residual
+across rounds so repeated compressed rounds do not drift.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
@@ -33,11 +43,14 @@ from repro.core import topics as T
 from repro.core.mqttfc import MQTTFC, raw_handler
 from repro.core.roles import ClientAssignment, RoleArbiter
 from repro.core.stats import ClientStats, local_stats
+from repro.core.wire import TensorBundle, TensorStack
 
 Params = dict[str, np.ndarray]
 
 
 def weighted_add(acc: Optional[Params], p: Params, w: float) -> Params:
+    """Legacy reference semantics (kept as the bit-identity oracle for the
+    in-place accumulator; see tests/test_wire.py)."""
     if acc is None:
         return {k: np.asarray(v, np.float64) * w for k, v in p.items()}
     for k, v in p.items():
@@ -45,18 +58,235 @@ def weighted_add(acc: Optional[Params], p: Params, w: float) -> Params:
     return acc
 
 
-@dataclass
+def _f64_schema(items: list[tuple[str, tuple]]) -> tuple:
+    """Schema of (name, '<f8', shape, offset, nbytes) for a flat f64 acc."""
+    schema = []
+    off = 0
+    for name, shape in items:
+        nb = int(np.prod(shape, dtype=np.int64)) * 8 if shape else 8
+        schema.append((name, np.dtype(np.float64).str, tuple(shape), off, nb))
+        off += nb
+    return tuple(schema)
+
+
 class _Accumulator:
-    acc: Optional[Params] = None             # sum reduction: weighted sums
-    entries: list = field(default_factory=list)   # stack reduction: raw
-    weight: float = 0.0
-    received: int = 0
-    flushed: bool = False
+    """Streaming per-duty aggregation state.
+
+    sum reduction: ``flat`` is ONE preallocated float64 buffer covering the
+    whole model; contributions are fused in with
+    ``multiply(src, w, out=scratch); add(flat, scratch, out=flat)``.
+
+    stack reduction: ``rows`` is one growing byte buffer of flattened
+    contributions (row-major, shared schema); strided views stack it with
+    zero copies at finalize.
+    """
+
+    __slots__ = ("flat", "scratch", "acc_schema", "src_schema", "_views",
+                 "_src_flat_dtype", "rows", "rows_used", "row_schema",
+                 "row_nbytes", "row_weights", "weight", "received",
+                 "flushed", "alloc_bytes")
+
+    def __init__(self):
+        self.hard_reset()
+
+    def hard_reset(self) -> None:
+        """Drop buffers too (model/strategy layout changed)."""
+        self.flat: Optional[np.ndarray] = None
+        self.scratch: Optional[np.ndarray] = None
+        self.acc_schema = None           # f64 layout of `flat`
+        self.src_schema = None           # wire schema the fast path matches
+        self._views: Optional[Params] = None
+        self._src_flat_dtype = None      # uniform source dtype (fast path)
+        self.rows: Optional[bytearray] = None
+        self.rows_used = 0
+        self.row_schema = None
+        self.row_nbytes = 0
+        self.row_weights: list[float] = []
+        self.weight = 0.0
+        self.received = 0
+        self.flushed = False
+        self.alloc_bytes = 0
 
     def restart(self) -> None:
-        self.acc, self.weight, self.received = None, 0.0, 0
-        self.entries = []
+        """New aggregation cycle: reset counters but KEEP the buffers —
+        reallocating multi-MB accumulators every round costs ~ms of page
+        faults; the first add of the next cycle overwrites in place.  A
+        layout change triggers ``hard_reset`` from the add paths."""
+        self.rows_used = 0
+        self.row_weights = []
+        self.weight = 0.0
+        self.received = 0
         self.flushed = False
+
+    # ------------------------------------------------------------------
+    # sum reduction
+    # ------------------------------------------------------------------
+    def _ensure_flat(self, items: list[tuple[str, tuple]],
+                     src_schema=None) -> None:
+        if self.flat is not None:
+            return
+        self.acc_schema = _f64_schema(items)
+        self.src_schema = src_schema
+        total = sum(b for *_x, b in self.acc_schema) // 8
+        self.flat = np.empty(total, np.float64)
+        self.alloc_bytes += self.flat.nbytes
+        mv = memoryview(self.flat)
+        self._views = {}
+        for name, _d, shape, off, nb in self.acc_schema:
+            self._views[name] = np.frombuffer(
+                mv.cast("B"), np.float64, count=nb // 8,
+                offset=off).reshape(shape)
+        if src_schema is not None:
+            dts = {d for _n, d, *_r in src_schema}
+            self._src_flat_dtype = np.dtype(next(iter(dts))) \
+                if len(dts) == 1 else None
+
+    def _ensure_scratch(self) -> None:
+        if self.scratch is None:
+            self.scratch = np.empty_like(self.flat)
+            self.alloc_bytes += self.scratch.nbytes
+
+    def acc_views(self) -> Params:
+        return self._views
+
+    def add_sum(self, contrib: Union[TensorBundle, Params], w: float) -> None:
+        """Fused in-place ``acc += contrib * w`` (bit-identical to the
+        legacy weighted_add float64 semantics)."""
+        w64 = np.float64(w)
+        if isinstance(contrib, TensorBundle):
+            if (self.received == 0 and self.src_schema is not None
+                    and contrib.schema != self.src_schema):
+                self.hard_reset()        # layout changed between cycles
+            if self.flat is None:
+                self._ensure_flat([(n, s) for n, _d, s, _o, _b
+                                   in contrib.schema], contrib.schema)
+            if (self._src_flat_dtype is not None
+                    and contrib.schema == self.src_schema):
+                # uniform-dtype source with identical layout: ONE fused op
+                # pair over the entire model.  w == 1.0 (the tree's
+                # partial-sum merge) needs no multiply at all — a single
+                # cast-add pass (x * 1.0 is exact, so still bit-identical
+                # to the legacy semantics).
+                dt = self._src_flat_dtype
+                src = np.frombuffer(memoryview(contrib.buffer).cast("B"), dt)
+                if self.received == 0:
+                    if w == 1.0:
+                        np.copyto(self.flat, src)
+                    else:
+                        np.multiply(src, w64, out=self.flat)
+                elif w == 1.0:
+                    np.add(self.flat, src, out=self.flat)
+                else:
+                    self._ensure_scratch()
+                    np.multiply(src, w64, out=self.scratch)
+                    np.add(self.flat, self.scratch, out=self.flat)
+                return
+            contrib = contrib.views()
+        items = [(k, np.asarray(v).shape) for k, v in contrib.items()]
+        if (self.received == 0 and self.acc_schema is not None
+                and items != [(n, s) for n, _d, s, _o, _b
+                              in self.acc_schema]):
+            self.hard_reset()            # layout changed between cycles
+        if self.flat is None:
+            self._ensure_flat(items)
+        first = self.received == 0
+        if not first and w != 1.0:
+            self._ensure_scratch()
+        for name, _d, shape, off, nb in self.acc_schema:
+            v = np.asarray(contrib[name])
+            dst = self._views[name]
+            if first:
+                if w == 1.0:
+                    np.copyto(dst, v)
+                else:
+                    np.multiply(v, w64, out=dst)
+            elif w == 1.0:
+                np.add(dst, v, out=dst)
+            else:
+                scr = np.frombuffer(memoryview(self.scratch).cast("B"),
+                                    np.float64, count=nb // 8,
+                                    offset=off).reshape(shape)
+                np.multiply(v, w64, out=scr)
+                np.add(dst, scr, out=dst)
+
+    def partial_bundle(self) -> TensorBundle:
+        """Re-frame the accumulator as a wire bundle — no re-serialization,
+        the frame encoder copies the buffer once."""
+        return TensorBundle(self.acc_schema, self.flat)
+
+    # ------------------------------------------------------------------
+    # stack reduction
+    # ------------------------------------------------------------------
+    def _ensure_rows(self, schema, expected_rows: int) -> None:
+        if self.rows is not None:
+            return
+        self.row_schema = tuple(
+            (n, d, tuple(s), o, b) for n, d, s, o, b in schema)
+        self.row_nbytes = sum(b for *_x, b in self.row_schema)
+        cap = max(1, expected_rows) * self.row_nbytes
+        self.rows = bytearray(cap)
+        self.alloc_bytes += cap
+
+    def _grow_rows(self, need: int) -> None:
+        if self.rows_used + need <= len(self.rows):
+            return
+        new_cap = self.rows_used + need
+        grown = bytearray(new_cap)
+        grown[:self.rows_used] = memoryview(self.rows)[:self.rows_used]
+        self.alloc_bytes += new_cap - len(self.rows)
+        self.rows = grown
+
+    def add_stack_row(self, contrib: Union[TensorBundle, Params], w: float,
+                      expected_rows: int) -> None:
+        if not isinstance(contrib, TensorBundle):
+            contrib = TensorBundle.from_params(
+                {k: np.asarray(v) for k, v in contrib.items()})
+        if (not self.row_weights and self.row_schema is not None
+                and contrib.schema != self.row_schema):
+            self.hard_reset()            # layout changed between cycles
+        self._ensure_rows(contrib.schema, expected_rows)
+        if contrib.schema != self.row_schema:
+            # canonicalize to the first row's layout (key order / dtypes)
+            contrib = TensorBundle.from_params(
+                {n: np.asarray(contrib.view(n), np.dtype(d)).reshape(s)
+                 for n, d, s, _o, _b in self.row_schema})
+        self._grow_rows(self.row_nbytes)
+        memoryview(self.rows)[self.rows_used:
+                              self.rows_used + self.row_nbytes] = \
+            memoryview(contrib.buffer).cast("B")
+        self.rows_used += self.row_nbytes
+        self.row_weights.append(float(w))
+
+    def add_stack_batch(self, batch: TensorStack, weights: list) -> None:
+        """A forwarded partial: n rows land with ONE memcpy."""
+        if (not self.row_weights and self.row_schema is not None
+                and batch.schema != self.row_schema):
+            self.hard_reset()
+        self._ensure_rows(batch.schema, batch.n)
+        assert batch.schema == self.row_schema, "stack schema mismatch"
+        nb = batch.nbytes
+        self._grow_rows(nb)
+        memoryview(self.rows)[self.rows_used:self.rows_used + nb] = \
+            memoryview(batch.buffer).cast("B")
+        self.rows_used += nb
+        self.row_weights.extend(float(x) for x in weights)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_weights)
+
+    def stack_slice(self) -> TensorStack:
+        """Collected rows as one zero-copy wire object."""
+        return TensorStack(self.row_schema, self.n_rows,
+                           memoryview(self.rows)[:self.rows_used])
+
+    def stacked_views(self) -> Params:
+        """Per-tensor (n, ...) strided views over the row buffer — the
+        no-duplicate replacement for per-key np.stack."""
+        return self.stack_slice().stacked_views()
+
+    def has_data(self) -> bool:
+        return self.flat is not None or self.rows_used > 0
 
 
 @dataclass
@@ -75,13 +305,29 @@ class _SessionCtx:
     terminated: bool = False
     peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
     stale_dropped: int = 0                   # late contributions discarded
+    uplink_err: Optional[Params] = None      # int8 error-feedback residual
 
     def acc_for(self, cluster_id: str) -> _Accumulator:
         return self.accs.setdefault(cluster_id, _Accumulator())
 
+    def note_mem(self) -> None:
+        """Incremental peak tracking: O(#duties), not O(#contributions) —
+        accumulators keep their own allocation counters."""
+        now = sum(a.alloc_bytes for a in self.accs.values())
+        if now > self.peak_acc_bytes:
+            self.peak_acc_bytes = now
+
     def reset_round(self, round_idx: int) -> None:
         self.round_idx = round_idx
-        self.accs.clear()
+        # keep accumulators (and their preallocated buffers) for duties
+        # that were actually exercised; drop idle ones (stale after a role
+        # rearrangement) so their memory is released
+        stale = [cid for cid, a in self.accs.items()
+                 if a.received == 0 and not a.flushed]
+        for cid in stale:
+            del self.accs[cid]
+        for a in self.accs.values():
+            a.restart()
 
 
 class ModelController:
@@ -101,16 +347,27 @@ class ModelController:
 
 class SDFLMQClient:
     """Mirrors the paper's SDFLMQ_Client (Listing 1).  ``broker`` is any
-    repro.api.transport.Transport implementation."""
+    repro.api.transport.Transport implementation.
+
+    ``wire_format``: "tb" (zero-copy TensorBundle, default) or "legacy"
+    (msgpack ExtType) — receivers understand both, so fleets can mix.
+    ``uplink_codec``: None, or "int8_ef" for int8 + error-feedback
+    quantized leaf uplinks (mirrors the compiled ``compressed`` schedule).
+    """
 
     def __init__(self, client_id: str, broker,
                  preferred_role: str = "trainer",
-                 stats: Optional[ClientStats] = None):
+                 stats: Optional[ClientStats] = None,
+                 wire_format: str = "tb",
+                 uplink_codec: Optional[str] = None):
+        assert uplink_codec in (None, "int8_ef"), uplink_codec
         self.client_id = client_id
         self.preferred_role = preferred_role
         self.stats = stats or local_stats(client_id)
+        self.uplink_codec = uplink_codec
         self.fc = MQTTFC(broker, client_id, will_topic=T.will(client_id),
-                         will_payload=_will_payload(client_id))
+                         will_payload=_will_payload(client_id),
+                         wire_format=wire_format)
         self.arbiter = RoleArbiter(client_id)
         self.models = ModelController()
         self.on_global_update: Optional[Callable] = None
@@ -173,10 +430,40 @@ class SDFLMQClient:
         asg = self.arbiter.assignment
         if asg is None or asg.train_cluster is None:
             raise RuntimeError(f"{self.client_id}: no trainer assignment yet")
-        self.fc.call(T.cluster_agg(session_id, asg.train_cluster),
-                     {"params": ctx.params, "weight": ctx.weight,
-                      "sender": self.client_id, "partial": False,
-                      "round": ctx.round_idx})
+        topic = T.cluster_agg(session_id, asg.train_cluster)
+        if self.uplink_codec == "int8_ef":
+            q, scales = self._quantize_uplink(ctx)
+            if self.fc.wire_format == "tb":   # legacy msgpack takes dicts
+                q = TensorBundle.from_params(q)
+                scales = TensorBundle.from_params(scales)
+            self.fc.call(topic,
+                         {"params": q, "scales": scales, "quantized": True,
+                          "weight": ctx.weight, "sender": self.client_id,
+                          "partial": False, "round": ctx.round_idx},
+                         quantized=True)
+            return
+        params = ctx.params
+        if self.fc.wire_format == "tb":
+            params = TensorBundle.from_params(params)
+        self.fc.call(topic, {"params": params, "weight": ctx.weight,
+                             "sender": self.client_id, "partial": False,
+                             "round": ctx.round_idx})
+
+    def _quantize_uplink(self, ctx: _SessionCtx):
+        """int8 + error feedback, same per-row absmax scheme the compiled
+        ``compressed`` schedule uses (repro.dist.compression, xp=numpy)."""
+        from repro.dist import compression as C
+        if ctx.uplink_err is None:
+            ctx.uplink_err = {k: np.zeros_like(np.asarray(v, np.float32))
+                              for k, v in ctx.params.items()}
+        q_params, scales = {}, {}
+        for k, v in ctx.params.items():
+            q, scale, new_err = C.quantize_with_error_feedback(
+                v, ctx.uplink_err[k], xp=np)
+            q_params[k] = q
+            scales[k] = np.asarray(scale, np.float32)
+            ctx.uplink_err[k] = new_err
+        return q_params, scales
 
     def wait_global_update(self, session_id: str) -> Params:
         """Synchronous in the simulated broker: delivery already happened by
@@ -253,10 +540,14 @@ class SDFLMQClient:
     def _strategy_for(self, ctx: _SessionCtx) -> AggregationStrategy:
         return get_strategy(ctx.strategy)
 
+    @staticmethod
+    def _premap_is_identity(strat: AggregationStrategy) -> bool:
+        return type(strat).premap is AggregationStrategy.premap
+
     def _on_cluster_input(self, topic: str, payload) -> None:
         """Aggregation service: accumulate inputs for one duty under the
-        session's strategy (weighted partial sums, or stacked raw
-        contributions for robust strategies)."""
+        session's strategy — streaming into the preallocated flat
+        accumulator (sum) or the row buffer (stack)."""
         body = _body(payload)
         parts = topic.split("/")       # sdflmq/session/<sid>/cluster/<cid>/agg
         sid, cluster_id = parts[2], parts[4]
@@ -278,18 +569,26 @@ class SDFLMQClient:
         w = float(body["weight"])
         if strat.reduction == "stack":
             if body.get("partial"):
-                a.entries.extend(body["entries"])
+                if "stack" in body:       # TensorStack batch (tb wire)
+                    a.add_stack_batch(body["stack"], body["weights"])
+                else:                     # legacy entries list
+                    for e in body["entries"]:
+                        a.add_stack_row(_as_params(e["params"]),
+                                        float(e["weight"]), duty.expected)
             else:
-                a.entries.append({"params": body["params"], "weight": w})
+                a.add_stack_row(_bundle_or_params(body), w, duty.expected)
         else:
             if body.get("partial"):
-                a.acc = weighted_add(a.acc, body["params"], 1.0)
+                a.add_sum(_bundle_or_params(body), 1.0)
             else:
-                contrib = strat.premap(body["params"], ctx.global_params, np)
-                a.acc = weighted_add(a.acc, contrib, w)
+                contrib = _bundle_or_params(body)
+                if not self._premap_is_identity(strat):
+                    contrib = strat.premap(_as_params(contrib),
+                                           ctx.global_params, np)
+                a.add_sum(contrib, w)
         a.weight += w
         a.received += 1
-        ctx.peak_acc_bytes = max(ctx.peak_acc_bytes, _acc_bytes(ctx))
+        ctx.note_mem()
         if a.received >= duty.expected:
             self._flush(sid, cluster_id)
 
@@ -297,25 +596,44 @@ class SDFLMQClient:
         ctx = self.models.get(session_id)
         duty = self.arbiter.duty_for(cluster_id)
         a = ctx.accs.get(cluster_id)
-        if duty is None or a is None or a.flushed \
-                or (a.acc is None and not a.entries):
+        if duty is None or a is None or a.flushed or not a.has_data():
             return
         if not force and a.received < duty.expected:
             return
         strat = self._strategy_for(ctx)
+        legacy_wire = self.fc.wire_format == "legacy"
         if duty.parent is not None:
             if strat.reduction == "stack":
-                payload = {"entries": a.entries, "weight": a.weight,
-                           "sender": self.client_id, "partial": True,
-                           "round": ctx.round_idx}
+                if legacy_wire:
+                    sv = a.stacked_views()
+                    payload = {"entries": [
+                        {"params": {k: sv[k][i] for k in sv},
+                         "weight": a.row_weights[i]}
+                        for i in range(a.n_rows)],
+                        "weight": a.weight,
+                        "sender": self.client_id, "partial": True,
+                        "round": ctx.round_idx}
+                else:
+                    # forward collected rows as ONE zero-copy slice; the
+                    # frame encoder copies the buffer once — leaves are
+                    # never re-encoded
+                    payload = {"stack": a.stack_slice(),
+                               "weights": list(a.row_weights),
+                               "weight": a.weight,
+                               "sender": self.client_id, "partial": True,
+                               "round": ctx.round_idx}
             else:
-                payload = {"params": a.acc, "weight": a.weight,
+                partial = (dict(a.acc_views()) if legacy_wire
+                           else a.partial_bundle())
+                payload = {"params": partial, "weight": a.weight,
                            "sender": self.client_id, "partial": True,
                            "round": ctx.round_idx}
             self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
         else:
             glob, new_state = self._finalize_root(ctx, strat, a)
-            msg = {"params": glob, "version": ctx.global_version + 1,
+            msg = {"params": TensorBundle.from_params(glob)
+                   if self.fc.wire_format == "tb" else glob,
+                   "version": ctx.global_version + 1,
                    "round": ctx.round_idx}
             if new_state is not None:
                 # server-optimizer state rides the retained global publish,
@@ -329,13 +647,12 @@ class SDFLMQClient:
                        a: _Accumulator):
         """Root aggregator: collected inputs -> (global float32, state)."""
         if strat.reduction == "stack":
-            stacked = {k: np.stack([np.asarray(e["params"][k])
-                                    for e in a.entries])
-                       for k in a.entries[0]["params"]}
-            weights = np.asarray([e["weight"] for e in a.entries], np.float64)
+            stacked = a.stacked_views()     # strided, no duplicate copies
+            weights = np.asarray(a.row_weights, np.float64)
             glob = strat.combine(stacked, weights, np)
             return {k: np.asarray(v, np.float32) for k, v in glob.items()}, None
-        mean = {k: v / a.weight for k, v in a.acc.items()}
+        wsum = np.float64(a.weight)
+        mean = {k: v / wsum for k, v in a.acc_views().items()}
         glob, new_state = strat.finalize(mean, ctx.global_params,
                                          ctx.server_state, np)
         return {k: np.asarray(v, np.float32) for k, v in glob.items()}, new_state
@@ -346,7 +663,7 @@ class SDFLMQClient:
         ctx = self.models.sessions.get(sid)
         if ctx is None:
             return
-        ctx.params = {k: np.asarray(v) for k, v in body["params"].items()}
+        ctx.params = _as_params(body["params"])
         strat = self._strategy_for(ctx)
         if strat.needs_ref or strat.stateful:
             # only reference-using strategies pay for a retained global copy
@@ -365,18 +682,39 @@ def _body(payload):
     return payload
 
 
+def _as_params(obj) -> Params:
+    """Normalize a wire params object to a dict of arrays (views when the
+    source is a TensorBundle — zero copy)."""
+    if isinstance(obj, TensorBundle):
+        return obj.to_params()
+    return {k: np.asarray(v) for k, v in obj.items()}
+
+
+def _bundle_or_params(body) -> Union[TensorBundle, Params]:
+    p = body["params"]
+    if body.get("quantized"):
+        return _dequantize(p, body["scales"])
+    return p
+
+
+def _dequantize(q_obj, s_obj) -> Params:
+    """int8 + per-row scales -> float32 params, via the SAME dequantizer
+    the compiled ``compressed`` schedule uses."""
+    from repro.dist.compression import dequantize_int8
+    q = _as_params(q_obj)
+    s = _as_params(s_obj)
+    return {k: dequantize_int8(v, s[k], xp=np) for k, v in q.items()}
+
+
 def _acc_bytes(ctx: _SessionCtx) -> int:
-    total = 0
-    for a in ctx.accs.values():
-        if a.acc is not None:
-            total += sum(v.nbytes for v in a.acc.values())
-        for e in a.entries:
-            total += sum(np.asarray(v).nbytes for v in e["params"].values())
-    return total
+    """Live accumulator bytes for ``ctx`` (incremental counters; kept for
+    introspection/tests)."""
+    return sum(a.alloc_bytes for a in ctx.accs.values())
 
 
 def _will_payload(client_id: str) -> bytes:
-    # a minimal MQTTFC frame announcing the dead client
+    # a minimal MQTTFC frame announcing the dead client (legacy header:
+    # receivers accept both generations)
     from repro.core import mqttfc as F
     import msgpack
     body = F.encode({"a": [client_id], "k": {}, "s": client_id})

@@ -4,15 +4,31 @@
 Remotely executable functions are bound to MQTT topics; any client can
 publish to the function topic with arguments in the payload, and the bound
 function runs on every subscriber.  Large payloads (model parameter sets)
-are serialized (msgpack with numpy extension), optionally compressed
-(zlib — as in the paper — or zstd), split into fixed-size batches with
-``batch_id``/part counters, and reassembled at the receiver.
+ride the zero-copy TensorBundle wire format (repro.core.wire): tensors are
+flattened once into the frame's data region, chunked into fixed-size parts
+via memoryview slices (no per-part copies), reassembled into one
+preallocated buffer at the receiver, and decoded as zero-copy views.  The
+legacy msgpack-ExtType format remains as a fallback codec
+(``wire_format="legacy"``) so every change is bit-identity-testable.
+
+Frame layout (one wire message)::
+
+    [4B header len][msgpack header][chunk]
+    header = (sender, call_id, part_idx, n_parts, flags, codec,
+              total_len, chunk_offset)            # 6-tuple = legacy frames
+    flags:  1 = compressed   2 = TensorBundle body   4 = quantized payload
+
+Compression defaults to zstd when the ``zstandard`` wheel is importable
+(zlib — the paper's baseline — otherwise); bodies flagged as
+int8-quantized skip the recompression attempt entirely, and incompressible
+tensor bodies are detected with a cheap sample probe before paying for a
+full-body compress.
 """
 from __future__ import annotations
 
 import itertools
 import zlib
-from dataclasses import dataclass, field
+from collections import OrderedDict
 from typing import Any, Callable, Optional
 
 import msgpack
@@ -25,12 +41,23 @@ except Exception:  # pragma: no cover
 
 from typing import TYPE_CHECKING
 
-from repro.core.broker import Message
+from repro.core import wire
+from repro.core.broker import Message, TopicTrie
 
 if TYPE_CHECKING:  # protocol import for typing only (no runtime cycle)
     from repro.api.transport import Transport
 
 _NUMPY_EXT = 42
+
+# frame flag bits
+F_COMPRESSED = 1
+F_TENSORBUNDLE = 2
+F_QUANTIZED = 4
+
+
+def default_codec() -> str:
+    """zstd when the wheel is importable, else the paper's zlib baseline."""
+    return "zstd" if _zstd is not None else "zlib"
 
 
 def _default(obj):
@@ -52,6 +79,7 @@ def _ext_hook(code, data):
 
 
 def encode(obj: Any) -> bytes:
+    """Legacy msgpack+ExtType body codec (fallback wire format)."""
     return msgpack.packb(obj, default=_default, use_bin_type=True)
 
 
@@ -60,15 +88,22 @@ def decode(data: bytes) -> Any:
                            strict_map_key=False)
 
 
-def compress(data: bytes, codec: str) -> bytes:
+_FAST_LEVEL_BYTES = 1 << 20
+
+
+def compress(data, codec: str) -> bytes:
+    # zlib/zstd accept any buffer-protocol object: no staging copy.
+    # Large bodies (multi-MB float64 partial sums) drop to level 1: ~30%
+    # less CPU for ~4% worse ratio on float-mantissa data.
+    level = 1 if len(data) > _FAST_LEVEL_BYTES else 3
     if codec == "zlib":
-        return zlib.compress(data, level=3)
+        return zlib.compress(data, level=level)
     if codec == "zstd" and _zstd is not None:
-        return _zstd.ZstdCompressor(level=3).compress(data)
+        return _zstd.ZstdCompressor(level=level).compress(data)
     return data
 
 
-def decompress(data: bytes, codec: str) -> bytes:
+def decompress(data, codec: str) -> bytes:
     if codec == "zlib":
         return zlib.decompress(data)
     if codec == "zstd" and _zstd is not None:
@@ -76,37 +111,107 @@ def decompress(data: bytes, codec: str) -> bytes:
     return data
 
 
-@dataclass
-class _Reassembly:
-    n_parts: int
-    parts: dict[int, bytes] = field(default_factory=dict)
+_PROBE_BYTES = 4096
+_PROBE_RATIO = 0.85
 
-    def add(self, idx: int, data: bytes) -> Optional[bytes]:
-        self.parts[idx] = data
+
+def _worth_compressing(body) -> bool:
+    """Cheap entropy probe: compress small samples from the head, middle,
+    and tail of the body; bail out early for high-entropy tensor payloads
+    (random float mantissas probe at ~0.9, where a full-body compress
+    costs ~16ms/MB for a marginal size win).  Three spread samples keep a
+    mostly-zero body with one dense random region from skipping
+    compression it would benefit from."""
+    n = len(body)
+    if n <= 3 * _PROBE_BYTES:
+        return True
+    mv = memoryview(body)
+    k = _PROBE_BYTES
+    sample = bytes(mv[:k]) + bytes(mv[n // 2:n // 2 + k]) + bytes(mv[n - k:])
+    return len(zlib.compress(sample, 1)) < len(sample) * _PROBE_RATIO
+
+
+class _FrameAssembly:
+    """Multi-part frame reassembly into ONE preallocated buffer: each
+    chunk is written at its header-declared offset (a single memcpy per
+    part — the only copy on the receive path)."""
+
+    __slots__ = ("buf", "n_parts", "got")
+
+    def __init__(self, total_len: int, n_parts: int):
+        self.buf = bytearray(total_len)
+        self.n_parts = n_parts
+        self.got: set[int] = set()
+
+    def add(self, idx: int, offset: int, chunk) -> Optional[bytearray]:
+        if idx not in self.got:
+            self.got.add(idx)
+            self.buf[offset:offset + len(chunk)] = chunk
+        if len(self.got) == self.n_parts:
+            return self.buf
+        return None
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.buf)
+
+
+class _LegacyAssembly:
+    """Legacy reassembly (no total length on the wire): parts are kept and
+    joined on completion."""
+
+    __slots__ = ("n_parts", "parts")
+
+    def __init__(self, n_parts: int):
+        self.n_parts = n_parts
+        self.parts: dict[int, bytes] = {}
+
+    def add(self, idx: int, offset: int, chunk) -> Optional[bytes]:
+        self.parts[idx] = bytes(chunk)
         if len(self.parts) == self.n_parts:
             return b"".join(self.parts[i] for i in range(self.n_parts))
         return None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(p) for p in self.parts.values())
 
 
 class MQTTFC:
     """Per-client fleet-control endpoint.  ``broker`` is any object
     implementing the ``repro.api.transport.Transport`` protocol (the sim
-    broker, a LatencyTransport decorator, a real MQTT backend, ...)."""
+    broker, a LatencyTransport decorator, a real MQTT backend, ...).
+
+    ``wire_format`` selects the body codec for tensor-bearing payloads:
+    ``"tb"`` (default) is the zero-copy TensorBundle format, ``"legacy"``
+    the original msgpack-ExtType path.  Receivers always understand both
+    (the frame flags carry the format), so mixed fleets interoperate.
+    """
 
     def __init__(self, broker: "Transport", client_id: str,
                  max_batch_bytes: int = 64 * 1024,
-                 codec: str = "zlib",
+                 codec: Optional[str] = None,
                  compress_threshold: int = 4 * 1024,
                  will_topic: Optional[str] = None,
-                 will_payload: bytes = b""):
+                 will_payload: bytes = b"",
+                 wire_format: str = "tb",
+                 max_assemblies: int = 256):
+        assert wire_format in ("tb", "legacy"), wire_format
         self.broker = broker
         self.client_id = client_id
         self._call_ids = itertools.count(1)   # per-endpoint: deterministic
         self.max_batch_bytes = max_batch_bytes
-        self.codec = codec
+        self.codec = codec if codec is not None else default_codec()
         self.compress_threshold = compress_threshold
+        self.wire_format = wire_format
+        self.max_assemblies = max_assemblies
         self._fns: dict[str, Callable] = {}
-        self._buffers: dict[tuple, _Reassembly] = {}
+        self._filter_trie = TopicTrie()       # wildcard-bound handlers
+        self._dispatch_cache: dict[str, Optional[Callable]] = {}
+        # incomplete multi-part frames, LRU-ordered; key=(sender, topic),
+        # value = {call_id: assembly} — per-sender FIFO delivery means a
+        # part for call N+1 proves call N's missing parts were lost
+        self._buffers: "OrderedDict[tuple, dict[int, Any]]" = OrderedDict()
         will = Message(will_topic, will_payload, qos=1) if will_topic else None
         self.session = broker.connect(client_id, self._on_message, will=will)
         # wire-stats (paper evaluates load): logical calls vs wire messages
@@ -114,15 +219,22 @@ class MQTTFC:
         self.parts_sent = 0
         self.bytes_sent = 0
         self.raw_bytes_sent = 0
+        self.reassembly_evictions = 0
 
     # ---- binding ---------------------------------------------------------
     def bind(self, topic: str, fn: Callable, qos: int = 1) -> None:
         """Bind a remotely executable function to a topic."""
         self._fns[topic] = fn
+        if "+" in topic or "#" in topic:
+            self._filter_trie.insert(topic, topic)
+        self._dispatch_cache.clear()
         self.broker.subscribe(self.client_id, topic, qos=qos)
 
     def unbind(self, topic: str) -> None:
-        self._fns.pop(topic, None)
+        if self._fns.pop(topic, None) is not None and (
+                "+" in topic or "#" in topic):
+            self._filter_trie.remove(topic, topic)
+        self._dispatch_cache.clear()
         self.broker.unsubscribe(self.client_id, topic)
 
     def subscribe_raw(self, topic_filter: str, fn: Callable, qos: int = 1) -> None:
@@ -130,63 +242,146 @@ class MQTTFC:
         if not getattr(fn, "_raw", False):
             fn = raw_handler(fn)
         self._fns[topic_filter] = fn
+        if "+" in topic_filter or "#" in topic_filter:
+            self._filter_trie.insert(topic_filter, topic_filter)
+        self._dispatch_cache.clear()
         self.broker.subscribe(self.client_id, topic_filter, qos=qos)
 
     # ---- calling ---------------------------------------------------------
     def call(self, topic: str, *args, qos: int = 1, retain: bool = False,
-             **kwargs) -> None:
-        """Invoke the function bound to ``topic`` on all subscribers."""
-        body = encode({"a": list(args), "k": kwargs, "s": self.client_id})
-        self.raw_bytes_sent += len(body)
+             quantized: bool = False, **kwargs) -> None:
+        """Invoke the function bound to ``topic`` on all subscribers.
+        ``quantized=True`` marks the payload as already int8-compressed:
+        the recompression attempt is skipped and the frame flagged."""
+        obj = {"a": list(args), "k": kwargs, "s": self.client_id}
         flags = 0
-        if len(body) >= self.compress_threshold:
+        if self.wire_format == "tb" and wire.is_wire_payload(obj):
+            body = wire.encode_body(obj)
+            flags |= F_TENSORBUNDLE
+        else:
+            body = encode(obj)
+        self.raw_bytes_sent += len(body)
+        if quantized:
+            flags |= F_QUANTIZED
+        elif len(body) >= self.compress_threshold and _worth_compressing(body):
             comp = compress(body, self.codec)
             if len(comp) < len(body):
-                body, flags = comp, 1
+                body = comp
+                flags |= F_COMPRESSED
         call_id = next(self._call_ids)
-        n_parts = max(1, -(-len(body) // self.max_batch_bytes))
+        total = len(body)
+        n_parts = max(1, -(-total // self.max_batch_bytes))
         self.calls_sent += 1
+        mv = memoryview(body)
         for i in range(n_parts):
-            chunk = body[i * self.max_batch_bytes:(i + 1) * self.max_batch_bytes]
-            header = msgpack.packb((self.client_id, call_id, i, n_parts, flags,
-                                    self.codec))
-            frame = len(header).to_bytes(4, "big") + header + chunk
+            off = i * self.max_batch_bytes
+            chunk = mv[off:off + self.max_batch_bytes]
+            header = msgpack.packb((self.client_id, call_id, i, n_parts,
+                                    flags, self.codec, total, off))
+            frame = bytearray(4 + len(header) + len(chunk))
+            frame[0:4] = len(header).to_bytes(4, "big")
+            frame[4:4 + len(header)] = header
+            frame[4 + len(header):] = chunk
             self.parts_sent += 1
             self.bytes_sent += len(frame)
             self.broker.publish(topic, frame, qos=qos, retain=retain,
                                 sender=self.client_id)
 
+    # ---- reassembly ------------------------------------------------------
+    def _assembly_for(self, key: tuple, call_id: int, total: int,
+                      n_parts: int, legacy: bool):
+        calls = self._buffers.get(key)
+        if calls is None:
+            calls = self._buffers[key] = {}
+        else:
+            self._buffers.move_to_end(key)
+        asm = calls.get(call_id)
+        if asm is None:
+            # per-sender FIFO: a part of a NEWER call proves every missing
+            # part of an older incomplete call was dropped — evict them
+            stale = [c for c in calls if c < call_id]
+            for c in stale:
+                del calls[c]
+                self.reassembly_evictions += 1
+            asm = calls[call_id] = (_LegacyAssembly(n_parts) if legacy
+                                    else _FrameAssembly(total, n_parts))
+            self._evict_lru()
+        return asm
+
+    def _evict_lru(self) -> None:
+        while sum(len(c) for c in self._buffers.values()) > self.max_assemblies:
+            key, calls = next(iter(self._buffers.items()))
+            calls.pop(next(iter(calls)))
+            self.reassembly_evictions += 1
+            if not calls:
+                del self._buffers[key]
+
+    def reassembly_pending(self) -> int:
+        return sum(len(c) for c in self._buffers.values())
+
+    def wire_stats(self) -> dict:
+        return {
+            "calls_sent": self.calls_sent,
+            "parts_sent": self.parts_sent,
+            "bytes_sent": self.bytes_sent,
+            "raw_bytes_sent": self.raw_bytes_sent,
+            "reassembly_pending": self.reassembly_pending(),
+            "reassembly_evictions": self.reassembly_evictions,
+            "codec": self.codec,
+            "wire_format": self.wire_format,
+        }
+
     # ---- dispatch --------------------------------------------------------
     def _on_message(self, msg: Message) -> None:
-        hlen = int.from_bytes(msg.payload[:4], "big")
-        sender, call_id, idx, n_parts, flags, codec = msgpack.unpackb(
-            msg.payload[4:4 + hlen])
-        chunk = msg.payload[4 + hlen:]
-        key = (sender, call_id, msg.topic)
+        payload = memoryview(msg.payload)
+        hlen = int.from_bytes(payload[:4], "big")
+        header = msgpack.unpackb(payload[4:4 + hlen])
+        if len(header) >= 8:
+            sender, call_id, idx, n_parts, flags, codec, total, off = header[:8]
+            legacy_frame = False
+        else:   # legacy 6-tuple frame
+            sender, call_id, idx, n_parts, flags, codec = header
+            total, off = 0, 0
+            legacy_frame = True
+        chunk = payload[4 + hlen:]
         if n_parts == 1:
             body = chunk
         else:
-            buf = self._buffers.setdefault(key, _Reassembly(n_parts))
-            body = buf.add(idx, chunk)
+            key = (sender, msg.topic)
+            asm = self._assembly_for(key, call_id, total, n_parts,
+                                     legacy_frame)
+            body = asm.add(idx, off, chunk)
             if body is None:
                 return
-            del self._buffers[key]
-        if flags & 1:
+            del self._buffers[key][call_id]
+            if not self._buffers[key]:
+                del self._buffers[key]
+        if flags & F_COMPRESSED:
             body = decompress(body, codec)
-        payload = decode(body)
-        fn = self._fns.get(msg.topic)
-        if fn is None:  # wildcard-bound handlers
-            for filt, f in self._fns.items():
-                from repro.core.broker import topic_matches
-                if topic_matches(filt, msg.topic):
-                    fn = f
-                    break
+        fn = self._dispatch(msg.topic)
         if fn is None:
             return
-        if getattr(fn, "_raw", False):
-            fn(msg.topic, payload)
+        if flags & F_TENSORBUNDLE:
+            obj = wire.decode_body(body)
         else:
-            fn(*payload["a"], **payload["k"])
+            obj = decode(body if isinstance(body, bytes) else bytes(body))
+        if getattr(fn, "_raw", False):
+            fn(msg.topic, obj)
+        else:
+            fn(*obj["a"], **obj["k"])
+
+    def _dispatch(self, topic: str) -> Optional[Callable]:
+        """Handler lookup: exact map hit, then the wildcard trie through a
+        per-topic cache (invalidated on bind/unbind)."""
+        fn = self._fns.get(topic)
+        if fn is not None:
+            return fn
+        if topic in self._dispatch_cache:
+            return self._dispatch_cache[topic]
+        filts = self._filter_trie.match(topic)
+        fn = self._fns.get(filts[0]) if filts else None
+        self._dispatch_cache[topic] = fn
+        return fn
 
     def close(self, graceful: bool = True) -> None:
         self.broker.disconnect(self.client_id, graceful=graceful)

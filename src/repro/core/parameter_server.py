@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import topics as T
 from repro.core.broker import SimBroker
 from repro.core.mqttfc import MQTTFC, raw_handler
+from repro.core.wire import TensorBundle
 
 
 class ParameterServer:
@@ -28,8 +29,11 @@ class ParameterServer:
         args = payload["a"] if isinstance(payload, dict) and "a" in payload else [payload]
         body = args[0]
         sid = topic.split("/")[2]
+        p = body["params"]
+        params = (p.to_params() if isinstance(p, TensorBundle)
+                  else {k: np.asarray(v) for k, v in p.items()})
         self.store[sid] = {
-            "params": {k: np.asarray(v) for k, v in body["params"].items()},
+            "params": params,
             "version": body.get("version", 0),
             "round": body.get("round", 0),
         }

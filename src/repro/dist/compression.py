@@ -1,33 +1,44 @@
 """Collective/wire compression: int8 block quantization with per-row
 (last-dim) absmax scales, plus the error-feedback variant that keeps the
-quantization residual bounded across rounds (used on the DCN/pod hop where
-bandwidth is scarcest; see core/aggregation.py "compressed" schedule)."""
+quantization residual bounded across rounds.  Used on the DCN/pod hop where
+bandwidth is scarcest (core/aggregation.py "compressed" schedule) AND — via
+``xp=numpy`` — by the host MQTT uplink codec (core/client.py
+``uplink_codec="int8_ef"``), so both data paths share one quantizer.
+
+``xp`` is the array namespace (jax.numpy by default, resolved lazily so the
+host path never pays the jax import)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
 
 
-def quantize_int8(x):
+def quantize_int8(x, xp=None):
     """x -> (q int8, scale f32).  Scales are per last-dim row (keepdims), so
     ``q * scale`` broadcasts back to x's shape.  Max error <= absmax/127."""
-    xf = jnp.asarray(x).astype(jnp.float32)
+    xp = xp if xp is not None else _jnp()
+    xf = xp.asarray(x).astype(xp.float32)
     if xf.ndim == 0:
         xf = xf.reshape(1)
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    amax = xp.max(xp.abs(xf), axis=-1, keepdims=True)
+    scale = xp.where(amax > 0, amax, 1.0) / 127.0
+    q = xp.clip(xp.round(xf / scale), -127, 127).astype(xp.int8)
     return q, scale
 
 
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+def dequantize_int8(q, scale, xp=None):
+    xp = xp if xp is not None else _jnp()
+    return xp.asarray(q).astype(xp.float32) * scale
 
 
-def quantize_with_error_feedback(x, err):
+def quantize_with_error_feedback(x, err, xp=None):
     """Quantize ``x + err`` and carry the new residual forward.  The
     residual never exceeds one quantization step (absmax/127), so repeated
     compressed rounds do not drift."""
-    t = jnp.asarray(x).astype(jnp.float32) + err
-    q, scale = quantize_int8(t)
-    new_err = t - dequantize_int8(q, scale)
+    xp = xp if xp is not None else _jnp()
+    t = xp.asarray(x).astype(xp.float32) + err
+    q, scale = quantize_int8(t, xp=xp)
+    new_err = t - dequantize_int8(q, scale, xp=xp)
     return q, scale, new_err

@@ -191,3 +191,71 @@ class TestBroker:
         assert st["messages_sent"] == 1
         assert st["bytes_sent"] == 5
         assert st["dropped_no_subscriber"] == 1
+
+
+class TestTopicTrie:
+    """The routing trie must agree exactly with ``topic_matches`` and keep
+    its per-topic cache coherent across subscription churn."""
+
+    @settings(max_examples=150, deadline=None)
+    @given(seed=st.integers(0, 10**9))
+    def test_trie_agrees_with_linear_scan(self, seed):
+        from repro.core.broker import TopicTrie
+        rng = random.Random(seed)
+        levels = ["a", "b", "cc", ""]
+        filters = []
+        for _ in range(rng.randint(1, 8)):
+            parts = [rng.choice(levels + ["+"])
+                     for _ in range(rng.randint(1, 4))]
+            if rng.random() < 0.3:
+                parts[-1] = "#"
+            filters.append("/".join(parts))
+        trie = TopicTrie()
+        for i, f in enumerate(filters):
+            trie.insert(f, (i, f))
+        for _ in range(6):
+            topic = "/".join(rng.choice(levels)
+                             for _ in range(rng.randint(1, 4)))
+            if rng.random() < 0.25:
+                topic = "$SYS/" + topic
+            expect = [(i, f) for i, f in enumerate(filters)
+                      if topic_matches(f, topic)]
+            assert list(trie.match(topic)) == expect, (filters, topic)
+
+    def test_cache_invalidation_on_subscription_churn(self):
+        from repro.core.broker import TopicTrie
+        trie = TopicTrie()
+        trie.insert("a/+", "w")
+        assert list(trie.match("a/x")) == ["w"]       # cached now
+        trie.insert("a/x", "e")
+        assert list(trie.match("a/x")) == ["w", "e"]  # cache invalidated
+        trie.remove("a/+", "w")
+        assert list(trie.match("a/x")) == ["e"]
+        trie.remove("a/x", "e")
+        assert list(trie.match("a/x")) == []
+        assert trie.size == 0
+
+    def test_broker_routing_survives_resubscribe_and_disconnect(self):
+        b = SimBroker()
+        got, cb = _collector()
+        b.connect("c", cb)
+        b.subscribe("c", "t/#")
+        b.publish("t/a", b"1")
+        b.unsubscribe("c", "t/#")
+        b.publish("t/a", b"2")              # cached topic must NOT deliver
+        b.subscribe("c", "t/+")
+        b.publish("t/a", b"3")
+        b.disconnect("c")
+        b.publish("t/a", b"4")
+        assert [p for _t, p in got] == [b"1", b"3"]
+        assert b.sys_stats()["dropped_no_subscriber"] == 2
+
+    def test_reconnect_drops_old_subscriptions(self):
+        b = SimBroker()
+        got1, cb1 = _collector()
+        b.connect("c", cb1)
+        b.subscribe("c", "t/#")
+        got2, cb2 = _collector()
+        b.connect("c", cb2)                 # reconnect: fresh session
+        b.publish("t/a", b"x")
+        assert got1 == [] and got2 == []    # old subs died with the session

@@ -1,0 +1,380 @@
+"""Zero-copy TensorBundle data plane: wire round-trips (property-tested),
+legacy interop, bit-identity of tree aggregation vs the legacy msgpack
+path, streaming-accumulator semantics, reassembly eviction, and the
+int8+error-feedback uplink codec."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import Federation
+from repro.core.broker import SimBroker
+from repro.core.client import _Accumulator, weighted_add
+from repro.core.mqttfc import MQTTFC, default_codec
+from repro.core.wire import (TensorBundle, TensorStack, decode_body,
+                             encode_body, is_wire_payload)
+
+DTYPES = ["<f4", "<f8", "<f2", "<i1", "<i4", ">f4", ">i2", "|u1", "|b1"]
+
+
+# ---------------------------------------------------------------------------
+# TensorBundle round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(dt=st.sampled_from(DTYPES), ndim=st.integers(0, 3),
+       seed=st.integers(0, 10**6), empty=st.booleans())
+def test_bundle_roundtrip_property(dt, ndim, seed, empty):
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(x) for x in rng.integers(1, 5, size=ndim))
+    if empty and ndim:
+        shape = (0,) + shape[1:]
+    a = (rng.normal(size=shape) * 100).astype(np.dtype(dt))
+    b = rng.integers(-100, 100, size=(3, 2)).astype(np.int8)
+    tb = TensorBundle.from_params({"a": a, "b": b})
+    body = encode_body({"params": tb})
+    back = decode_body(bytes(body))["params"]
+    va, vb = back.view("a"), back.view("b")
+    assert va.dtype == a.dtype and va.shape == a.shape
+    np.testing.assert_array_equal(va, a)
+    np.testing.assert_array_equal(vb, b)
+
+
+def test_bundle_views_are_zero_copy():
+    p = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    tb = TensorBundle.from_params(p)
+    v = tb.views()["w"]
+    assert v.base is not None                     # a view, not an owner
+    # mutating the buffer is visible through the view: shared memory
+    memoryview(tb.buffer)[0:4] = np.float32(99.0).tobytes()
+    assert v[0, 0] == 99.0
+
+
+def test_bundle_mixed_dtypes_and_scalars():
+    p = {"q": np.ones((4, 3), np.int8), "s": np.float64(2.5) * np.ones(()),
+         "h": np.ones((2,), np.float16), "e": np.empty((0, 7), np.float32)}
+    back = decode_body(encode_body({"x": TensorBundle.from_params(p)}))["x"]
+    for k in p:
+        np.testing.assert_array_equal(back.view(k), p[k])
+        assert back.view(k).dtype == p[k].dtype
+
+
+def test_bare_arrays_and_nested_payloads():
+    obj = {"a": [np.arange(5), {"deep": np.ones((2, 2), ">f4")}],
+           "k": {"w": np.float32(1.5)}, "s": "me"}
+    back = decode_body(encode_body(obj))
+    np.testing.assert_array_equal(back["a"][0], np.arange(5))
+    np.testing.assert_array_equal(back["a"][1]["deep"], np.ones((2, 2)))
+    assert back["a"][1]["deep"].dtype == np.dtype(">f4")
+    assert back["k"]["w"] == 1.5
+    assert is_wire_payload(obj) and not is_wire_payload({"a": [1, "x"]})
+
+
+def test_tensorstack_strided_views_match_np_stack():
+    rng = np.random.default_rng(0)
+    rows = [{"w": rng.normal(size=(3, 4)).astype(np.float32),
+             "b": rng.integers(-5, 5, size=7).astype(np.int8)}
+            for _ in range(5)]
+    bundles = [TensorBundle.from_params(r) for r in rows]
+    buf = bytearray(b"".join(bytes(b.buffer) for b in bundles))
+    ts = TensorStack(bundles[0].schema, 5, buf)
+    sv = ts.stacked_views()
+    for k in ("w", "b"):
+        np.testing.assert_array_equal(
+            sv[k], np.stack([r[k] for r in rows]))
+    # round-trip through the body codec
+    back = decode_body(encode_body({"stack": ts}))["stack"]
+    np.testing.assert_array_equal(back.stacked_views()["w"], sv["w"])
+
+
+# ---------------------------------------------------------------------------
+# MQTTFC framing: multi-part, interop, eviction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(kb=st.integers(1, 64), batch=st.sampled_from([512, 1024, 4096]),
+       seed=st.integers(0, 999))
+def test_multipart_roundtrip_property(kb, batch, seed):
+    b = SimBroker()
+    rx = MQTTFC(b, "rx", max_batch_bytes=batch)
+    tx = MQTTFC(b, "tx", max_batch_bytes=batch)
+    got = []
+    rx.bind("t/m", lambda arr: got.append(arr))
+    arr = np.random.default_rng(seed).normal(size=(kb * 256,)).astype(np.float32)
+    tx.call("t/m", arr)
+    assert len(got) == 1
+    np.testing.assert_array_equal(got[0], arr)
+    assert got[0].dtype == arr.dtype
+
+
+@pytest.mark.parametrize("tx_fmt,rx_fmt", [("tb", "legacy"), ("legacy", "tb"),
+                                           ("tb", "tb")])
+def test_wire_format_interop(tx_fmt, rx_fmt):
+    """Receivers decode both generations: format rides the frame flags."""
+    b = SimBroker()
+    rx = MQTTFC(b, "rx", wire_format=rx_fmt, max_batch_bytes=2048)
+    tx = MQTTFC(b, "tx", wire_format=tx_fmt, max_batch_bytes=2048)
+    got = []
+    rx.bind("t/m", lambda d: got.append(d))
+    payload = {"params": np.arange(4000, dtype=np.float32), "weight": 2.0}
+    tx.call("t/m", payload)
+    assert len(got) == 1
+    np.testing.assert_array_equal(got[0]["params"], payload["params"])
+    assert got[0]["weight"] == 2.0
+
+
+def test_default_codec_prefers_zstd_when_importable():
+    try:
+        import zstandard  # noqa: F401
+        assert default_codec() == "zstd"
+    except ModuleNotFoundError:
+        assert default_codec() == "zlib"
+    b = SimBroker()
+    fc = MQTTFC(b, "x")
+    assert fc.codec == default_codec()
+
+
+def test_quantized_payload_skips_compression():
+    b = SimBroker()
+    rx = MQTTFC(b, "rx")
+    tx = MQTTFC(b, "tx", compress_threshold=0)
+    got = []
+    rx.bind("t/q", lambda d: got.append(d))
+    q = np.zeros(64 * 1024, np.int8)          # highly compressible
+    tx.call("t/q", {"params": q}, quantized=True)
+    # compression was skipped: wire bytes ~= raw bytes despite zero payload
+    assert tx.bytes_sent >= tx.raw_bytes_sent
+    np.testing.assert_array_equal(got[0]["params"], q)
+
+
+def test_reassembly_evicts_stale_calls_on_newer_frame():
+    """Per-sender FIFO: a part of call N+1 proves call N's missing parts
+    were dropped (QoS-0 loss) — the stale assembly is evicted."""
+    b = SimBroker()
+    rx = MQTTFC(b, "rx", max_batch_bytes=512)
+    tx = MQTTFC(b, "tx", max_batch_bytes=512)
+    got = []
+    rx.bind("t/m", lambda arr: got.append(arr))
+
+    # drop one mid-call part of the first big call at the transport level
+    orig_publish = b.publish
+    drop = {"armed": True}
+
+    def lossy_publish(topic, payload, qos=0, retain=False, sender="",
+                      _origin=""):
+        if drop["armed"] and tx.parts_sent == 3:   # lose exactly one part
+            drop["armed"] = False
+            return -1
+        return orig_publish(topic, payload, qos=qos, retain=retain,
+                            sender=sender, _origin=_origin)
+
+    b.publish = lossy_publish
+    big = np.random.default_rng(0).normal(size=1024).astype(np.float64)
+    tx.call("t/m", big)                       # incomplete: one part lost
+    assert got == [] and rx.reassembly_pending() == 1
+    tx.call("t/m", big + 1)                   # next call completes
+    assert len(got) == 1
+    np.testing.assert_array_equal(got[0], big + 1)
+    assert rx.reassembly_pending() == 0
+    assert rx.reassembly_evictions == 1
+    assert rx.wire_stats()["reassembly_evictions"] == 1
+
+
+def test_reassembly_lru_cap():
+    b = SimBroker()
+    rx = MQTTFC(b, "rx", max_batch_bytes=256, max_assemblies=4)
+    rx.bind("t/m", lambda *a: None)
+    # many senders each leave one incomplete assembly behind
+    for i in range(8):
+        tx = MQTTFC(b, f"tx{i}", max_batch_bytes=256)
+        orig = b.publish
+        sent = {"n": 0}
+
+        def first_part_only(topic, payload, qos=0, retain=False, sender="",
+                            _origin="", _orig=orig, _sent=sent):
+            _sent["n"] += 1
+            if _sent["n"] > 1:
+                return -1
+            return _orig(topic, payload, qos=qos, retain=retain,
+                         sender=sender, _origin=_origin)
+
+        b.publish = first_part_only
+        tx.call("t/m",
+                np.random.default_rng(i).normal(size=512))  # incompressible
+        b.publish = orig
+    assert rx.reassembly_pending() <= 4
+    assert rx.reassembly_evictions >= 4
+
+
+# ---------------------------------------------------------------------------
+# Streaming accumulator: bit-identity with the legacy float64 semantics
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 6), seed=st.integers(0, 10**6),
+       as_bundle=st.booleans())
+def test_accumulator_bit_identical_to_weighted_add(n, seed, as_bundle):
+    rng = np.random.default_rng(seed)
+    contribs = [({"w": rng.normal(size=(5, 3)).astype(np.float32),
+                  "b": rng.normal(size=7).astype(np.float32)},
+                 float(rng.integers(1, 9))) for _ in range(n)]
+    ref = None
+    acc = _Accumulator()
+    for i, (p, w) in enumerate(contribs):
+        ref = weighted_add(ref, p, w)
+        acc.add_sum(TensorBundle.from_params(p) if as_bundle else p, w)
+        acc.received += 1
+    views = acc.acc_views()
+    for k in ref:
+        assert np.array_equal(ref[k].view(np.int64), views[k].view(np.int64)), \
+            f"{k}: fused accumulate drifted from legacy float64 semantics"
+
+
+def _run_tree(strategy, wire_format, levels=3, n=9, rounds=2):
+    fed = Federation(levels=levels, aggregator_ratio=0.4,
+                     wire_format=wire_format)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients, strategy=strategy)
+    rngs = {f"c{i}": np.random.default_rng(100 + i) for i in range(n)}
+
+    def train(cid, g, rnd):
+        r = rngs[cid]
+        return ({"w": r.normal(size=(8, 4)).astype(np.float32),
+                 "b": r.normal(size=16).astype(np.float32)},
+                int(r.integers(1, 5)))
+
+    for _ in range(rounds):
+        session.run_round(train)
+    return session.global_params(), session
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "trimmed_mean",
+                                      "coordinate_median", "fedprox"])
+@pytest.mark.parametrize("levels", [1, 3])
+def test_global_bit_identical_tb_vs_legacy(strategy, levels):
+    """The TensorBundle path produces bit-identical globals to the legacy
+    msgpack path, for sum and stack strategies, across tree shapes."""
+    g_tb, _ = _run_tree(strategy, "tb", levels=levels)
+    g_leg, _ = _run_tree(strategy, "legacy", levels=levels)
+    assert g_tb.keys() == g_leg.keys()
+    for k in g_tb:
+        assert g_tb[k].dtype == g_leg[k].dtype
+        assert np.array_equal(np.ascontiguousarray(g_tb[k]).view(np.int32),
+                              np.ascontiguousarray(g_leg[k]).view(np.int32)), \
+            f"{strategy}/levels={levels}: {k} differs between wire formats"
+
+
+def test_stack_peak_acc_bytes_has_no_duplicate_stacked_copy():
+    """Stack strategies hold ONE copy of the gathered rows; finalize uses
+    strided views.  The pre-TensorBundle implementation held the decoded
+    entries PLUS a per-key np.stack duplicate (~2x)."""
+    _g, session = _run_tree("trimmed_mean", "tb", levels=1, n=8, rounds=1)
+    root_peaks = [cl.models.get("s").peak_acc_bytes
+                  for cl in session.participants.values()]
+    peak = max(root_peaks)
+    row_bytes = (8 * 4 + 16) * 4               # one f32 contribution
+    n_rows = 8
+    assert peak >= n_rows * row_bytes          # the rows are really held
+    assert peak <= int(1.25 * n_rows * row_bytes), \
+        "stack accumulator duplicated the gathered rows"
+
+
+def test_sum_accumulator_is_preallocated_and_in_place():
+    acc = _Accumulator()
+    p = {"w": np.ones((64, 64), np.float32)}
+    acc.add_sum(TensorBundle.from_params(p), 2.0)
+    acc.received += 1
+    buf_id = acc.flat.__array_interface__["data"][0]
+    for _ in range(5):
+        acc.add_sum(TensorBundle.from_params(p), 1.0)
+        acc.received += 1
+    assert acc.flat.__array_interface__["data"][0] == buf_id
+    np.testing.assert_allclose(acc.acc_views()["w"], 7.0)
+    # w=1.0 merges never needed the scratch buffer: one flat f64 acc only
+    assert acc.scratch is None
+    assert acc.alloc_bytes == acc.flat.nbytes
+    acc.add_sum(TensorBundle.from_params(p), 3.0)   # weighted: scratch now
+    acc.received += 1
+    assert acc.alloc_bytes == acc.flat.nbytes + acc.scratch.nbytes
+
+
+# ---------------------------------------------------------------------------
+# int8 + error-feedback uplink codec
+# ---------------------------------------------------------------------------
+
+def test_int8_uplink_roundtrip_accuracy():
+    fed = Federation(levels=1, uplink_codec="int8_ef")
+    clients = [fed.client(f"c{i}") for i in range(4)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients)
+    rng = np.random.default_rng(0)
+    models = {f"c{i}": {"w": rng.normal(size=(16, 8)).astype(np.float32)}
+              for i in range(4)}
+    g = session.run_round(lambda cid, _g, _r: (models[cid], 1))
+    ref = np.mean([models[c]["w"] for c in models], axis=0)
+    # int8 per-row absmax: error bounded by one quantization step
+    step = max(np.abs(models[c]["w"]).max() for c in models) / 127.0
+    assert np.max(np.abs(g["w"] - ref)) <= step * 1.5
+
+
+def test_int8_uplink_error_feedback_reduces_drift():
+    """With error feedback the client's residual is carried forward, so a
+    constant model's quantization error does not accumulate over rounds."""
+    from repro.dist.compression import (dequantize_int8,
+                                        quantize_with_error_feedback)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    err = np.zeros_like(x)
+    deq_sum = np.zeros_like(x)
+    rounds = 50
+    for _ in range(rounds):
+        q, scale, err = quantize_with_error_feedback(x, err, xp=np)
+        deq_sum += dequantize_int8(q, scale, xp=np)
+    # the mean of the dequantized stream converges to x (EF property)
+    drift = np.max(np.abs(deq_sum / rounds - x))
+    naive_step = np.abs(x).max() / 127.0
+    assert drift < naive_step / 2
+
+
+def test_int8_uplink_matches_compiled_quantizer():
+    """Host (numpy) quantizer is the same function the compiled
+    ``compressed`` schedule uses — same q/scale on the same input."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.dist.compression import quantize_int8
+    x = np.random.default_rng(2).normal(size=(8, 16)).astype(np.float32)
+    q_np, s_np = quantize_int8(x, xp=np)
+    q_j, s_j = quantize_int8(jnp.asarray(x))
+    np.testing.assert_array_equal(q_np, np.asarray(q_j))
+    np.testing.assert_allclose(s_np, np.asarray(s_j), rtol=1e-6)
+
+
+def test_int8_uplink_on_legacy_wire_format():
+    """uplink_codec and wire_format are independent knobs: quantized
+    uplinks must also work over the legacy msgpack wire."""
+    fed = Federation(levels=1, wire_format="legacy", uplink_codec="int8_ef")
+    clients = [fed.client(f"c{i}") for i in range(3)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients)
+    rng = np.random.default_rng(3)
+    m = {"w": rng.normal(size=(8, 8)).astype(np.float32)}
+    g = session.run_round(lambda cid, _g, _r: (m, 1))
+    step = np.abs(m["w"]).max() / 127.0
+    assert np.max(np.abs(g["w"] - m["w"])) <= step * 1.5
+
+
+def test_decoded_views_are_read_only():
+    """Uncompressed single-part frames are shared by every subscriber and
+    the retained store: decoded views must refuse in-place mutation."""
+    b = SimBroker()
+    rx1 = MQTTFC(b, "rx1", compress_threshold=1 << 30)
+    rx2 = MQTTFC(b, "rx2", compress_threshold=1 << 30)
+    tx = MQTTFC(b, "tx", compress_threshold=1 << 30)
+    got = {}
+    rx1.bind("t/m", lambda d: got.setdefault("r1", d))
+    rx2.bind("t/m", lambda d: got.setdefault("r2", d))
+    tx.call("t/m", {"params": TensorBundle.from_params(
+        {"w": np.arange(64, dtype=np.float32)})})
+    v1 = got["r1"]["params"].view("w")
+    with pytest.raises(ValueError):
+        v1[0] = 99.0
+    np.testing.assert_array_equal(got["r2"]["params"].view("w"),
+                                  np.arange(64, dtype=np.float32))
