@@ -1,0 +1,133 @@
+"""Sync vs async federation: virtual wall-clock to a fixed target loss
+under a straggler tail.
+
+The fleet has a heavy tail: most clients train+upload in ~1 virtual
+second, two stragglers take 6-10x longer.  The synchronous round protocol
+gates every round on the slowest client; the async K-of-N path
+(repro.api.async_fl) keeps minting globals at the fast clients' cadence
+while stragglers fold in late-but-stamped.  Both runs share the same
+contractive training dynamics (each client pulls the global toward its own
+target; loss = MSE of the global against the all-client target mean) and
+the same discrete-event clock, so the comparison is deterministic and
+machine-independent — the derived speedup is gated in CI.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import numpy as np
+
+from repro.api import Federation, scenarios
+
+N_FAST = 6
+TAIL_S = {"c6": 6.0, "c7": 10.0}        # straggler compute+upload times
+FAST_S = 1.0
+STEP = 0.5                               # contraction per local update
+TARGET_LOSS = 0.05
+BUFFER_K = 4
+
+
+def _fleet_spec():
+    n = N_FAST + len(TAIL_S)
+    rng = np.random.default_rng(11)
+    dim = 64 if os.environ.get("SMOKE") else 4096
+    base = rng.normal(loc=3.0, scale=0.25, size=n).astype(np.float32)
+    targets = {f"c{i}": np.full(dim, base[i], np.float32) for i in range(n)}
+    mean_target = np.mean([targets[c] for c in targets], axis=0)
+    return n, dim, targets, mean_target
+
+
+def _train_fn(targets):
+    def train(cid, g, r):
+        base = np.zeros_like(targets[cid]) if g is None \
+            else np.asarray(g["w"])
+        return {"w": (base + np.float32(STEP) * (targets[cid] - base))}, 1
+    return train
+
+
+def _loss(params, mean_target) -> float:
+    return float(np.mean((np.asarray(params["w"]) - mean_target) ** 2))
+
+
+def _time_to_target(curve, target):
+    for t, loss in curve:
+        if loss <= target:
+            return t
+    return None
+
+
+def _run_sync(n, targets, mean_target, rounds=20):
+    fed = Federation(latency=dict(seed=5), aggregator_ratio=0.4)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    for cid in clients:
+        fed.transport.set_link(cid.client_id,
+                               delay_s=TAIL_S.get(cid.client_id, FAST_S))
+    session = fed.create_session("sync", "m", rounds=rounds,
+                                 participants=clients)
+    curve = []
+    session.on_global_update = lambda p, v: curve.append(
+        (fed.clock.now, _loss(p, mean_target)))
+    scenarios.play(session, _train_fn(targets), rounds=rounds,
+                   round_time_s=1.0,
+                   initial_params={"w": np.zeros_like(mean_target)})
+    return curve
+
+
+def _run_async(n, targets, mean_target, versions=60):
+    fed = Federation(latency=dict(seed=5), aggregator_ratio=0.4)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    periods = {c: TAIL_S.get(c, FAST_S) for c in (cl.client_id
+                                                  for cl in clients)}
+    session = fed.create_session(
+        "async", "m", rounds=versions, participants=clients,
+        async_mode=dict(buffer_k=BUFFER_K, staleness_bound=6,
+                        staleness_weight="poly", poly_a=0.5,
+                        base_period_s=FAST_S, periods=periods, seed=5))
+    curve = []
+    session.on_global_update = lambda p, v: curve.append(
+        (fed.clock.now, _loss(p, mean_target)))
+    report = session.run_async(_train_fn(targets), max_time_s=400.0,
+                               initial_params={"w":
+                                               np.zeros_like(mean_target)})
+    return curve, report
+
+
+def run(verbose: bool = True):
+    n, dim, targets, mean_target = _fleet_spec()
+    sync_curve = _run_sync(n, targets, mean_target)
+    async_curve, report = _run_async(n, targets, mean_target)
+    t_sync = _time_to_target(sync_curve, TARGET_LOSS)
+    t_async = _time_to_target(async_curve, TARGET_LOSS)
+    assert t_sync is not None, "sync run never reached the target loss"
+    assert t_async is not None, "async run never reached the target loss"
+    speedup = t_sync / t_async
+    rows = [
+        ("async_sync_time_to_target", t_sync * 1e6,
+         {"virtual_s": round(t_sync, 3), "rounds": len(sync_curve),
+          "target_loss": TARGET_LOSS, "dim": dim}),
+        ("async_async_time_to_target", t_async * 1e6,
+         {"virtual_s": round(t_async, 3), "updates": len(async_curve),
+          "buffer_k": BUFFER_K, "admitted": report.admitted,
+          "rejected_stale": report.rejected_stale}),
+        ("async_speedup", (t_sync - t_async) * 1e6,
+         {"speedup_x": round(speedup, 2), "target_loss": TARGET_LOSS,
+          "straggler_tail_s": sorted(TAIL_S.values())}),
+    ]
+    if verbose:
+        print(f"  sync:  {t_sync:8.2f} virtual s to loss {TARGET_LOSS} "
+              f"({len(sync_curve)} rounds, straggler-gated)")
+        print(f"  async: {t_async:8.2f} virtual s to loss {TARGET_LOSS} "
+              f"({len(async_curve)} updates, K={BUFFER_K})")
+        print(f"  async speedup: {speedup:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(name, round(us, 1), derived)

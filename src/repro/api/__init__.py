@@ -10,9 +10,12 @@
 Submodules:
     federation — Federation / FederatedSession facade
     strategies — pluggable AggregationStrategy registry (fedavg, fedprox,
-                 trimmed_mean, coordinate_median, fedadam); one surface for
-                 both the host MQTT path and the compiled collective path
+                 trimmed_mean, coordinate_median, fedadam, *_poly staleness
+                 variants); one surface for both the host MQTT path and the
+                 compiled collective path
     transport  — Transport protocol + LatencyTransport edge-network model
+    async_fl   — AsyncFederatedSession: bounded-staleness FedBuff buffers,
+                 per-client pacing, head gossip under partitions
 
 Heavy imports are lazy (PEP 562) so core modules can import
 ``repro.api.strategies`` without dragging in the full facade.
@@ -30,7 +33,11 @@ _EXPORTS = {
     "LatencyTransport": ("repro.api.transport", "LatencyTransport"),
     "LinkModel": ("repro.api.transport", "LinkModel"),
     "SimClock": ("repro.api.transport", "SimClock"),
+    "AsyncConfig": ("repro.api.async_fl", "AsyncConfig"),
+    "AsyncFederatedSession": ("repro.api.async_fl", "AsyncFederatedSession"),
+    "AsyncReport": ("repro.api.async_fl", "AsyncReport"),
     "scenarios": ("repro.api.scenarios", None),   # submodule, not attribute
+    "async_fl": ("repro.api.async_fl", None),     # submodule
 }
 
 __all__ = sorted(_EXPORTS)

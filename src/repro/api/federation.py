@@ -119,11 +119,19 @@ class Federation:
                        strategy: Union[str, AggregationStrategy] = "fedavg",
                        capacity: Optional[tuple[int, int]] = None,
                        session_time_s: float = 3600.0,
-                       waiting_time_s: float = 120.0) -> "FederatedSession":
+                       waiting_time_s: float = 120.0,
+                       async_mode=None) -> "FederatedSession":
         """First participant creates the session, the rest join.  ``capacity``
         defaults to exactly the participant set (session starts immediately
         once everyone has joined); pass ``(min, max)`` to leave headroom for
         elastic joins — then call ``session.start()`` once quorum suffices.
+
+        ``async_mode`` switches the session to asynchronous K-of-N
+        federation (bounded-staleness FedBuff buffers, per-client pacing,
+        optional head gossip): pass a ``repro.api.async_fl.AsyncConfig``, a
+        dict of its fields, or ``True`` for the defaults — the handle is
+        then an ``AsyncFederatedSession`` driven by ``run_async`` and
+        ``rounds`` becomes the global-version budget.
 
         A client endpoint can hold aggregation *roles* in only one session
         at a time (the RoleArbiter tracks a single assignment, as in the
@@ -134,14 +142,25 @@ class Federation:
         cap_min, cap_max = capacity or (len(members), len(members))
         # names pass through untouched (resolve from the shared registry);
         # tuned instances get a session-scoped registration in the client
-        session = FederatedSession(self, session_id, model_name,
-                                   get_strategy(strategy))
+        async_wire = None
+        if async_mode:
+            from repro.api.async_fl import (AsyncConfig,
+                                            AsyncFederatedSession)
+            acfg = (async_mode if isinstance(async_mode, AsyncConfig)
+                    else AsyncConfig() if async_mode is True
+                    else AsyncConfig(**dict(async_mode)))
+            session = AsyncFederatedSession(self, session_id, model_name,
+                                            get_strategy(strategy), acfg)
+            async_wire = acfg.to_wire()
+        else:
+            session = FederatedSession(self, session_id, model_name,
+                                       get_strategy(strategy))
         self.sessions[session_id] = session
         members[0].create_fl_session(
             session_id, model_name, fl_rounds=rounds,
             session_capacity_min=cap_min, session_capacity_max=cap_max,
             session_time_s=session_time_s, waiting_time_s=waiting_time_s,
-            strategy=strategy)
+            strategy=strategy, async_cfg=async_wire)
         session._admit(members[0])
         for m in members[1:]:
             session.join(m, rounds=rounds)

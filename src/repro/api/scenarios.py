@@ -177,6 +177,25 @@ class ScenarioReport:
     timeline: list = field(default_factory=list)   # (t, event) breadcrumbs
 
 
+def play_async(session, train_fn: Callable,
+               events: Sequence[ScenarioEvent] = (),
+               target_version: Optional[int] = None,
+               max_time_s: float = 600.0, initial_params=None):
+    """Drive an ``AsyncFederatedSession`` through its K-of-N pacing loop
+    with scenario ``events`` armed.  Time-driven events (partitions, flaky
+    links) fire on the virtual clock exactly as in ``play``; round-driven
+    events (churn) fire once per minted *global version* instead of per
+    synchronous round.  Returns the session's ``AsyncReport`` (versions
+    minted, admitted/stale-rejected contributions, gossip counters,
+    virtual time, timeline)."""
+    from repro.api.async_fl import AsyncFederatedSession
+    assert isinstance(session, AsyncFederatedSession), \
+        "play_async drives async sessions; use play() for synchronous ones"
+    return session.run_async(train_fn, target_version=target_version,
+                             max_time_s=max_time_s, events=events,
+                             initial_params=initial_params)
+
+
 def play(session, train_fn: Callable, events: Sequence[ScenarioEvent] = (),
          rounds: Optional[int] = None, round_time_s: float = 1.0,
          initial_params=None, stats_fn: Optional[Callable] = None,

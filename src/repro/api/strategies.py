@@ -34,6 +34,21 @@ from __future__ import annotations
 from typing import Callable, Optional, Union
 
 
+def _live_mask(weights, xp):
+    """(alive bool mask, live count) for churn-aware masked combines."""
+    alive = xp.asarray(weights) > 0
+    return alive, xp.sum(alive.astype(xp.int32))
+
+
+def _sort_dead_last(s, alive, xp):
+    """Sort rows ascending with dead rows pushed behind a +big sentinel —
+    the shared scaffolding of the masked robust combines (static shapes:
+    works identically for numpy and traced jax)."""
+    s = xp.asarray(s, xp.float32)
+    amask = alive.reshape((s.shape[0],) + (1,) * (s.ndim - 1))
+    return xp.sort(xp.where(amask, s, xp.float32(3.0e38)), axis=0)
+
+
 def _tmap(fn, *trees):
     """Map over matching pytrees of dict/list/tuple containers.  Pure
     Python: the host MQTT path (flat numpy dicts) must not pay the jax
@@ -70,6 +85,22 @@ class AggregationStrategy:
         """Client-stacked params (leading dim = n) + weights (n,) -> global."""
         raise NotImplementedError(f"{self.name} is not a stack strategy")
 
+    def combine_masked(self, stacked, weights, xp):
+        """Churn-aware variant used by the compiled collective path: rows
+        whose weight is <= 0 (dead/vacant mesh slots) must not shift the
+        statistic.  The default delegates to ``combine`` (correct for
+        weighted sums, overridden by the robust stack strategies)."""
+        return self.combine(stacked, weights, xp)
+
+    # -- asynchronous-FL hook ----------------------------------------------
+    def staleness_discount(self, staleness: int) -> float:
+        """Weight multiplier for a contribution trained ``staleness`` global
+        versions ago (bounded-staleness FedBuff buffers, repro.api.async_fl).
+        The base semantics are *constant*: staleness does not change the
+        weight — which keeps the async path bit-identical to the synchronous
+        one when every contribution is fresh."""
+        return 1.0
+
     def init_state(self, params):
         return None
 
@@ -101,6 +132,36 @@ class FedProx(AggregationStrategy):
                      + mu * xp.asarray(g, xp.float32), params, ref)
 
 
+class _PolyStaleness:
+    """Mixin: polynomial staleness discount ``(1 + s) ** -a`` (Xie et al.,
+    "Asynchronous Federated Optimization") for FedBuff-style buffers."""
+
+    def __init__(self, a: float = 0.5, **kw):
+        assert a >= 0.0, a
+        self.staleness_a = float(a)
+        super().__init__(**kw)
+
+    def staleness_discount(self, staleness: int) -> float:
+        return (1.0 + float(max(0, staleness))) ** (-self.staleness_a)
+
+
+class FedAvgStaleness(_PolyStaleness, FedAvg):
+    """FedAvg with polynomial staleness discounting: a contribution trained
+    ``s`` global versions ago is admitted at weight ``w * (1+s)^-a``."""
+
+    name = "fedavg_poly"
+
+
+class FedProxStaleness(_PolyStaleness, FedProx):
+    """FedProx proximal aggregation + polynomial staleness discounting."""
+
+    name = "fedprox_poly"
+
+    def __init__(self, a: float = 0.5, mu: float = 0.1):
+        _PolyStaleness.__init__(self, a=a)
+        FedProx.__init__(self, mu=mu)
+
+
 class TrimmedMean(AggregationStrategy):
     """Byzantine-robust coordinate-wise trimmed mean: drop the k highest and
     k lowest values per coordinate (k = floor(beta * n)), average the rest.
@@ -125,6 +186,26 @@ class TrimmedMean(AggregationStrategy):
             return xp.mean(srt, axis=0)
         return _tmap(one, stacked)
 
+    def combine_masked(self, stacked, weights, xp):
+        """Churn-aware trimmed mean with static shapes: dead rows (weight
+        <= 0) are sorted to the top via a +big sentinel and the trim window
+        ``[k, m-k)`` is computed over the *live* count ``m`` — so a departed
+        client's stale row can never shift the statistic.  Reduces to
+        ``combine`` when every row is live; all-dead yields zeros."""
+        alive, m = _live_mask(weights, xp)
+
+        def one(s):
+            srt = _sort_dead_last(s, alive, xp)
+            n = srt.shape[0]
+            k = xp.floor(self.beta * m).astype(xp.int32)
+            k = xp.maximum(xp.where(2 * k >= m, (m - 1) // 2, k), 0)
+            idx = xp.arange(n).reshape((n,) + (1,) * (srt.ndim - 1))
+            inc = (idx >= k) & (idx < m - k)
+            cnt = xp.maximum(m - 2 * k, 1).astype(xp.float32)
+            out = xp.sum(xp.where(inc, srt, xp.float32(0.0)), axis=0) / cnt
+            return xp.where(m > 0, out, xp.zeros_like(out))
+        return _tmap(one, stacked)
+
 
 class CoordinateMedian(AggregationStrategy):
     """Byzantine-robust coordinate-wise median over all contributors."""
@@ -135,6 +216,22 @@ class CoordinateMedian(AggregationStrategy):
     def combine(self, stacked, weights, xp):
         return _tmap(lambda s: xp.median(xp.asarray(s, xp.float32), axis=0),
                      stacked)
+
+    def combine_masked(self, stacked, weights, xp):
+        """Churn-aware coordinate median: dead rows sort to the top behind a
+        +big sentinel; the median indices are taken over the live count
+        (all-dead yields zeros)."""
+        alive, m = _live_mask(weights, xp)
+
+        def one(s):
+            srt = _sort_dead_last(s, alive, xp)
+            lo = xp.take(srt, xp.maximum((m - 1) // 2, 0), axis=0)
+            hi = xp.take(srt, m // 2, axis=0)
+            # halve-then-add: two sentinel rows (all-dead) must not
+            # overflow float32 before the m=0 guard zeroes them
+            out = lo * xp.float32(0.5) + hi * xp.float32(0.5)
+            return xp.where(m > 0, out, xp.zeros_like(out))
+        return _tmap(one, stacked)
 
 
 class FedAdam(AggregationStrategy):
@@ -207,6 +304,8 @@ def list_strategies() -> list[str]:
 
 register_strategy("fedavg", FedAvg)
 register_strategy("fedprox", FedProx)
+register_strategy("fedavg_poly", FedAvgStaleness)
+register_strategy("fedprox_poly", FedProxStaleness)
 register_strategy("trimmed_mean", TrimmedMean)
 register_strategy("coordinate_median", CoordinateMedian)
 register_strategy("fedadam", FedAdam)

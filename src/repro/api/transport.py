@@ -115,6 +115,17 @@ class SimClock:
         i.e. after every in-flight delivery cascade has settled."""
         self._idle_cbs.append(fn)
 
+    def schedule_periodic(self, period: float, fn: Callable,
+                          first_at: Optional[float] = None,
+                          jitter_fn: Optional[Callable] = None) -> "_PeriodicTimer":
+        """Arm a recurring *timer* event every ``period`` virtual seconds
+        (first firing at ``first_at``, default ``now + period``).  The
+        returned handle's ``cancel()`` stops the series; ``fn`` returning
+        ``False`` also stops it.  ``jitter_fn()`` (if given) is added to
+        each inter-fire gap — pass a seeded callable for reproducible
+        jitter.  Used by async-FL per-client pacing and head-gossip timers."""
+        return _PeriodicTimer(self, float(period), fn, first_at, jitter_fn)
+
     # ---- hold: manual mode ----------------------------------------------
     @property
     def held(self) -> bool:
@@ -203,6 +214,42 @@ class SimClock:
 
     def advance(self, dt: float) -> float:
         return self.advance_to(self.now + dt)
+
+
+class _PeriodicTimer:
+    """Self-rescheduling timer series on a SimClock (see
+    ``SimClock.schedule_periodic``)."""
+
+    __slots__ = ("clock", "period", "fn", "jitter_fn", "cancelled", "_ev",
+                 "fires")
+
+    def __init__(self, clock: SimClock, period: float, fn: Callable,
+                 first_at: Optional[float], jitter_fn: Optional[Callable]):
+        self.clock = clock
+        self.period = period
+        self.fn = fn
+        self.jitter_fn = jitter_fn
+        self.cancelled = False
+        self.fires = 0
+        t0 = clock.now + period if first_at is None else float(first_at)
+        self._ev = clock.schedule(t0, self._fire, timer=True)
+
+    def _fire(self) -> None:
+        if self.cancelled:
+            return
+        self.fires += 1
+        keep = self.fn()
+        if keep is False or self.cancelled:
+            self.cancelled = True
+            return
+        gap = self.period + (self.jitter_fn() if self.jitter_fn else 0.0)
+        self._ev = self.clock.schedule(self.clock.now + max(gap, 1e-9),
+                                       self._fire, timer=True)
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        if self._ev is not None:
+            self._ev.cancel()
 
 
 @dataclass

@@ -18,10 +18,11 @@ The aggregation *strategy* (repro.api.strategies) decides the math; the
 decomposable into partial sums, so every schedule lowers to one all-gather
 over the client axis followed by a local (replicated) robust combine — the
 exact collective analogue of the host path forwarding stacked contributions
-up the MQTT tree.  Note: the combine sees every mesh row; rows carried with
-zero FedAvg weight (dead clients kept on the mesh) still contribute their
-parameters to the robust statistics — churn-exact robust aggregation lives
-on the host path.
+up the MQTT tree.  The combine is churn-aware (``combine_masked``): mesh
+rows carried with zero FedAvg weight (dead/vacant client slots) are sorted
+behind a sentinel and the trim/median window is computed over the *live*
+count, so a departed client's stale row cannot shift the robust statistics
+— matching the host path's churn-exact behavior with static shapes.
 
 All run under shard_map; the client axis is ``axis`` ("data" in replica
 mode, "pod" in shared mode).
@@ -135,12 +136,15 @@ def aggregate_params(params, weights, mesh: Mesh, axis: str,
 
         if strat.reduction == "stack":
             # robust combine needs every contribution: one all-gather, then
-            # a replicated local combine (identical result on every shard)
+            # a replicated local combine (identical result on every shard).
+            # The combine is churn-aware: rows carried with zero weight
+            # (dead/vacant mesh slots) are masked out of the robust
+            # statistics instead of feeding them stale parameters.
             stacked = jax.tree_util.tree_map(
                 lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True),
                 p_local)
             w_full = jax.lax.all_gather(w_local, axis, axis=0, tiled=True)
-            combined = strat.combine(stacked, w_full, jnp)
+            combined = strat.combine_masked(stacked, w_full, jnp)
             out = jax.tree_util.tree_map(
                 lambda m, p: m[None].astype(p.dtype), combined, p_local)
             return tuple(jax.tree_util.tree_leaves(out))

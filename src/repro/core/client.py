@@ -306,6 +306,20 @@ class _SessionCtx:
     peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
     stale_dropped: int = 0                   # late contributions discarded
     uplink_err: Optional[Params] = None      # int8 error-feedback residual
+    # -- asynchronous mode (repro.api.async_fl) ------------------------
+    async_cfg: Optional[dict] = None         # admission rules (from topology)
+    async_bufs: dict = field(default_factory=dict)   # cluster -> AsyncBuffer
+    view_params: Optional[Params] = None     # latest model view (training base)
+    site_seq: int = 0                        # gossip site-model generation
+    version_from_gossip: bool = False        # current version adopted, not
+                                             # received: the real global (with
+                                             # ref/server state) is still due
+    async_admitted: int = 0
+    async_rejected: int = 0                  # contributions past the bound
+    gossip_sent: int = 0
+    gossip_adopts: int = 0
+    gossip_merges: int = 0
+    site_updates: int = 0
 
     def acc_for(self, cluster_id: str) -> _Accumulator:
         return self.accs.setdefault(cluster_id, _Accumulator())
@@ -383,7 +397,8 @@ class SDFLMQClient:
                           session_time_s: float = 3600.0,
                           waiting_time_s: float = 120.0,
                           preferred_role: Optional[str] = None,
-                          strategy: str = "fedavg") -> None:
+                          strategy: str = "fedavg",
+                          async_cfg: Optional[dict] = None) -> None:
         strat = get_strategy(strategy)           # fail fast on unknown names
         if isinstance(strategy, str):
             strategy = strat.name
@@ -402,7 +417,8 @@ class SDFLMQClient:
                      self.client_id, fl_rounds, session_capacity_min,
                      session_capacity_max, session_time_s, waiting_time_s,
                      preferred_role or self.preferred_role,
-                     self.stats.to_dict(), strategy=strategy)
+                     self.stats.to_dict(), strategy=strategy,
+                     async_cfg=async_cfg)
 
     def join_fl_session(self, session_id: str, model_name: str,
                         fl_rounds: int = 0,
@@ -431,6 +447,11 @@ class SDFLMQClient:
         if asg is None or asg.train_cluster is None:
             raise RuntimeError(f"{self.client_id}: no trainer assignment yet")
         topic = T.cluster_agg(session_id, asg.train_cluster)
+        # async sessions stamp the *global version the training started
+        # from* (the FedBuff staleness reference); sync sessions stamp the
+        # round barrier index
+        stamp = ctx.global_version if ctx.async_cfg is not None \
+            else ctx.round_idx
         if self.uplink_codec == "int8_ef":
             q, scales = self._quantize_uplink(ctx)
             if self.fc.wire_format == "tb":   # legacy msgpack takes dicts
@@ -439,7 +460,7 @@ class SDFLMQClient:
             self.fc.call(topic,
                          {"params": q, "scales": scales, "quantized": True,
                           "weight": ctx.weight, "sender": self.client_id,
-                          "partial": False, "round": ctx.round_idx},
+                          "partial": False, "round": stamp},
                          quantized=True)
             return
         params = ctx.params
@@ -447,7 +468,7 @@ class SDFLMQClient:
             params = TensorBundle.from_params(params)
         self.fc.call(topic, {"params": params, "weight": ctx.weight,
                              "sender": self.client_id, "partial": False,
-                             "round": ctx.round_idx})
+                             "round": stamp})
 
     def _quantize_uplink(self, ctx: _SessionCtx):
         """int8 + error feedback, same per-row absmax scheme the compiled
@@ -497,6 +518,10 @@ class SDFLMQClient:
                               raw_handler(self._on_status))
         self.fc.subscribe_raw(T.global_model(session_id),
                               raw_handler(self._on_global))
+        # async-mode head gossip: cheap to hold in sync sessions (nothing
+        # publishes there), and late role changes need no re-subscription
+        self.fc.subscribe_raw(T.gossip_all(session_id),
+                              raw_handler(self._on_gossip))
 
     def _on_ctrl(self, payload: dict) -> None:
         ev = payload.get("event")
@@ -519,10 +544,15 @@ class SDFLMQClient:
             ctx.tree = body.get("tree")
             # session-wide strategy rides the retained topology broadcast
             ctx.strategy = body.get("strategy", ctx.strategy)
+            # async admission rules (incl. live cohort size) ride along too
+            ctx.async_cfg = body.get("async") or ctx.async_cfg
             # a (re)joining client syncs its round counter from the retained
-            # topology, so its next contribution carries the live round
+            # topology, so its next contribution carries the live round.
+            # Async sessions have no round barrier: rearrangements must NOT
+            # reset the FedBuff buffers mid-fill.
             rnd = body.get("round")
-            if rnd is not None and rnd > ctx.round_idx:
+            if ctx.async_cfg is None and rnd is not None \
+                    and rnd > ctx.round_idx:
                 ctx.reset_round(rnd)
         elif ev == "round_start":
             ctx.reset_round(body.get("round", ctx.round_idx))
@@ -555,6 +585,9 @@ class SDFLMQClient:
         duty = self.arbiter.duty_for(cluster_id)
         if ctx is None or duty is None:
             return
+        if ctx.async_cfg is not None:
+            return self._on_cluster_input_async(sid, cluster_id, body,
+                                                ctx, duty)
         # asynchronous delivery: a contribution held by a partition (or a
         # straggler's QoS-1 retransmission) can arrive after its round was
         # deadline-cut — drop it instead of polluting the current round
@@ -592,6 +625,81 @@ class SDFLMQClient:
         if a.received >= duty.expected:
             self._flush(sid, cluster_id)
 
+    def _on_cluster_input_async(self, sid: str, cluster_id: str, body,
+                                ctx: _SessionCtx, duty) -> None:
+        """FedBuff admission (repro.api.async_fl): round-stamped
+        contributions are rejected past the staleness bound, admitted at a
+        discounted weight otherwise, and the duty flushes K-of-N style —
+        the root when ``buffer_k`` leaf contributions landed, heads once a
+        proportional share of their cluster reported.  Partials were
+        admission-checked and discounted downstream, so they fold in
+        unconditionally (their ``contribs`` count rides along)."""
+        from repro.api import async_fl as A
+        acfg = ctx.async_cfg
+        strat = self._strategy_for(ctx)
+        a = ctx.acc_for(cluster_id)
+        buf = ctx.async_bufs.get(cluster_id)
+        if buf is None or buf.acc is not a:
+            buf = ctx.async_bufs[cluster_id] = A.AsyncBuffer(a, acfg, strat)
+        if a.flushed:                  # first input of a new buffer cycle
+            a.restart()
+            buf.start_cycle()
+        stamp = int(body.get("round") or 0)
+        bound = acfg.get("bound")
+        if body.get("partial"):
+            # partials were discounted at their admission point, but a
+            # partial held back (partition, slow link) can outlive the
+            # bound in transit — its min-stamp decides, its whole
+            # contribution count is rejected and counted
+            pstamp = int(body.get("stamp", stamp))
+            if bound is not None and ctx.global_version - pstamp > bound:
+                nc = int(body.get("contribs", 1))
+                buf.rejected_stale += nc
+                ctx.async_rejected += nc
+                ctx.stale_dropped += nc
+                return
+            w = float(body["weight"])
+            if strat.reduction == "stack":
+                if "stack" in body:
+                    a.add_stack_batch(body["stack"], body["weights"])
+                else:
+                    for e in body["entries"]:
+                        a.add_stack_row(_as_params(e["params"]),
+                                        float(e["weight"]), duty.expected)
+            else:
+                a.add_sum(_bundle_or_params(body), 1.0)
+            buf.contribs += int(body.get("contribs", 1))
+            buf.note_stamp(int(body.get("stamp", stamp)))
+        else:
+            staleness = max(0, ctx.global_version - stamp)
+            if bound is not None and staleness > bound:
+                buf.rejected_stale += 1
+                ctx.async_rejected += 1
+                ctx.stale_dropped += 1
+                return
+            w = float(body["weight"]) * float(buf.discount(staleness))
+            contrib = _bundle_or_params(body)
+            if strat.reduction == "stack":
+                a.add_stack_row(contrib, w, duty.expected)
+            else:
+                if not self._premap_is_identity(strat):
+                    contrib = strat.premap(_as_params(contrib),
+                                           ctx.global_params, np)
+                a.add_sum(contrib, w)
+            buf.contribs += 1
+            buf.note_stamp(stamp)
+            ctx.async_admitted += 1
+        a.weight += w
+        a.received += 1
+        ctx.note_mem()
+        cohort = max(1, int(acfg.get("cohort", 1)))
+        k = min(max(1, int(acfg.get("k", 1))), cohort)
+        if duty.parent is None:
+            if buf.contribs >= k:
+                self._flush(sid, cluster_id, force=True)
+        elif a.received >= A.head_share(duty.expected, k, cohort):
+            self._flush(sid, cluster_id, force=True)
+
     def _flush(self, session_id: str, cluster_id: str, force: bool = False) -> None:
         ctx = self.models.get(session_id)
         duty = self.arbiter.duty_for(cluster_id)
@@ -602,6 +710,9 @@ class SDFLMQClient:
             return
         strat = self._strategy_for(ctx)
         legacy_wire = self.fc.wire_format == "legacy"
+        buf = ctx.async_bufs.get(cluster_id) \
+            if ctx.async_cfg is not None else None
+        stamp_round = ctx.global_version if buf is not None else ctx.round_idx
         if duty.parent is not None:
             if strat.reduction == "stack":
                 if legacy_wire:
@@ -612,7 +723,7 @@ class SDFLMQClient:
                         for i in range(a.n_rows)],
                         "weight": a.weight,
                         "sender": self.client_id, "partial": True,
-                        "round": ctx.round_idx}
+                        "round": stamp_round}
                 else:
                     # forward collected rows as ONE zero-copy slice; the
                     # frame encoder copies the buffer once — leaves are
@@ -621,25 +732,56 @@ class SDFLMQClient:
                                "weights": list(a.row_weights),
                                "weight": a.weight,
                                "sender": self.client_id, "partial": True,
-                               "round": ctx.round_idx}
+                               "round": stamp_round}
             else:
                 partial = (dict(a.acc_views()) if legacy_wire
                            else a.partial_bundle())
                 payload = {"params": partial, "weight": a.weight,
                            "sender": self.client_id, "partial": True,
-                           "round": ctx.round_idx}
+                           "round": stamp_round}
+            if buf is not None:
+                # stamped partial: contribution count for the root's K-of-N
+                # trigger + the oldest admitted stamp for reconciliation
+                payload["contribs"] = buf.contribs
+                payload["stamp"] = buf.min_stamp if buf.min_stamp is not None \
+                    else ctx.global_version
+                self._mint_site_model(ctx, strat, a)
             self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
         else:
             glob, new_state = self._finalize_root(ctx, strat, a)
+            if buf is not None:
+                # async root: apply the new global locally *now* — the next
+                # buffer cycle must stamp against the new version even
+                # before the published echo loops back (a second K-of-N
+                # flush inside the same delivery cascade would otherwise
+                # mint a duplicate version)
+                ctx.global_version += 1
+                ctx.params = glob
+                ctx.view_params = glob
+                ctx.site_seq = 0
+                ctx.version_from_gossip = False
+                if strat.needs_ref or strat.stateful:
+                    ctx.global_params = {k: np.array(v)
+                                         for k, v in glob.items()}
+                if new_state is not None:
+                    ctx.server_state = new_state
+                version = ctx.global_version
+                if self.on_global_update:
+                    self.on_global_update(session_id, ctx.params, version)
+            else:
+                version = ctx.global_version + 1
             msg = {"params": TensorBundle.from_params(glob)
                    if self.fc.wire_format == "tb" else glob,
-                   "version": ctx.global_version + 1,
-                   "round": ctx.round_idx}
+                   "version": version,
+                   "round": version if buf is not None else ctx.round_idx}
             if new_state is not None:
                 # server-optimizer state rides the retained global publish,
                 # so whichever client roots the next round resumes it
                 msg["server_state"] = new_state
             self.fc.call(T.global_model(session_id), msg, retain=True)
+        if buf is not None:
+            buf.flushes += 1
+            buf.start_cycle()
         a.restart()
         a.flushed = True
 
@@ -657,12 +799,117 @@ class SDFLMQClient:
                                          ctx.server_state, np)
         return {k: np.asarray(v, np.float32) for k, v in glob.items()}, new_state
 
+    # ------------------------------------------------------------------
+    # Head gossip (async mode, repro.api.async_fl)
+    # ------------------------------------------------------------------
+    def _mint_site_model(self, ctx: _SessionCtx, strat: AggregationStrategy,
+                         a: _Accumulator) -> None:
+        """Gossip mode: a head that just flushed a partial also blends the
+        buffer mean into its own model view (a *site model*, stamped
+        ``(version, site_seq)``).  During a partition this is what keeps
+        the root-less side converging; a real global (strictly newer
+        version) always supersedes it."""
+        acfg = ctx.async_cfg
+        if not acfg or float(acfg.get("gossip_period_s", 0.0)) <= 0:
+            return
+        if strat.reduction == "stack":
+            if a.n_rows == 0:
+                return
+            glob = strat.combine(a.stacked_views(),
+                                 np.asarray(a.row_weights, np.float64), np)
+            mean = {k: np.asarray(v, np.float32) for k, v in glob.items()}
+        else:
+            if a.weight <= 0:
+                return
+            wsum = np.float64(a.weight)
+            mean = {k: np.asarray(v / wsum, np.float32)
+                    for k, v in a.acc_views().items()}
+        alpha = float(acfg.get("gossip_alpha", 0.5))
+        view = ctx.view_params
+        if view is None or any(k not in view for k in mean):
+            ctx.view_params = mean
+        else:
+            ctx.view_params = {
+                k: ((1.0 - alpha) * np.asarray(view[k], np.float64)
+                    + alpha * np.asarray(mean[k], np.float64)).astype(
+                        np.float32)
+                for k in mean}
+        ctx.site_seq += 1
+        ctx.site_updates += 1
+
+    def gossip_publish(self, session_id: str) -> bool:
+        """Publish this head's current model view (global or site model) on
+        the session's gossip topic.  QoS 1, so a partition holds — not
+        drops — cross-site gossip until heal."""
+        ctx = self.models.sessions.get(session_id)
+        if ctx is None or ctx.async_cfg is None or ctx.terminated \
+                or ctx.view_params is None:
+            return False
+        params = {k: np.asarray(v, np.float32)
+                  for k, v in ctx.view_params.items()}
+        if self.fc.wire_format == "tb":
+            params = TensorBundle.from_params(params)
+        self.fc.call(T.gossip(session_id, self.client_id),
+                     {"params": params, "version": ctx.global_version,
+                      "site_seq": ctx.site_seq, "sender": self.client_id})
+        ctx.gossip_sent += 1
+        return True
+
+    def _on_gossip(self, topic: str, payload) -> None:
+        """Round-stamped gossip merge: adopt a strictly-newer version,
+        average same-version site models (symmetric gossip averaging — two
+        heads converge to consensus), ignore older stamps.  Applied by
+        every participant, so cluster members train on their head's site
+        model while partitioned away from the root."""
+        body = _body(payload)
+        sid = topic.split("/")[2]
+        ctx = self.models.sessions.get(sid)
+        if ctx is None or ctx.async_cfg is None or ctx.terminated:
+            return
+        if body.get("sender") == self.client_id:
+            return
+        v = int(body.get("version", 0))
+        s = int(body.get("site_seq", 0))
+        if v > ctx.global_version:
+            ctx.view_params = _as_params(body["params"])
+            ctx.global_version = v
+            ctx.site_seq = s
+            ctx.version_from_gossip = True
+            ctx.gossip_adopts += 1
+        elif v == ctx.global_version and (s > 0 or ctx.site_seq > 0):
+            inc = _as_params(body["params"])
+            view = ctx.view_params
+            if view is None:
+                ctx.view_params = {k: np.asarray(x, np.float32)
+                                   for k, x in inc.items()}
+                ctx.site_seq = s
+                ctx.gossip_adopts += 1
+                return
+            if set(view) != set(inc):
+                return
+            ctx.view_params = {
+                k: ((np.asarray(view[k], np.float64)
+                     + np.asarray(inc[k], np.float64))
+                    * 0.5).astype(np.float32)
+                for k in view}
+            ctx.site_seq = max(ctx.site_seq, s)
+            ctx.gossip_merges += 1
+
     def _on_global(self, topic: str, payload) -> None:
         body = _body(payload)
         sid = topic.split("/")[2]
         ctx = self.models.sessions.get(sid)
         if ctx is None:
             return
+        if ctx.async_cfg is not None:
+            ver = body.get("version", 0)
+            # drop stale echoes (incl. the async root's own mint) — but a
+            # version first learned through *gossip* still owes us its real
+            # global: that publish carries the strategy reference and any
+            # server-optimizer state the gossip message did not
+            if ver < ctx.global_version or (ver == ctx.global_version
+                                            and not ctx.version_from_gossip):
+                return
         ctx.params = _as_params(body["params"])
         strat = self._strategy_for(ctx)
         if strat.needs_ref or strat.stateful:
@@ -671,6 +918,10 @@ class SDFLMQClient:
         if "server_state" in body:
             ctx.server_state = body["server_state"]
         ctx.global_version = body.get("version", ctx.global_version + 1)
+        # a real global supersedes any gossip site model as the training base
+        ctx.view_params = ctx.params
+        ctx.site_seq = 0
+        ctx.version_from_gossip = False
         if self.on_global_update:
             self.on_global_update(sid, ctx.params, ctx.global_version)
 

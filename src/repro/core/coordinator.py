@@ -67,14 +67,16 @@ class Coordinator:
                         waiting_time_s: float = 120.0,
                         preferred_role: str = "aggregator",
                         stats: Optional[dict] = None,
-                        strategy: str = "fedavg") -> None:
+                        strategy: str = "fedavg",
+                        async_cfg: Optional[dict] = None) -> None:
         if session_id in self.sessions:
             # paper: first create wins; later requests are dumped
             return
         s = FLSession(session_id, model_name, creator, fl_rounds,
                       capacity_min, capacity_max, session_time_s,
                       waiting_time_s, strategy=strategy,
-                      round_deadline_s=self.cfg.round_deadline_s)
+                      round_deadline_s=self.cfg.round_deadline_s,
+                      async_cfg=dict(async_cfg) if async_cfg else None)
         self.sessions[session_id] = s
         if self.clock is not None:
             s.created_at = self.clock.now
@@ -124,6 +126,8 @@ class Coordinator:
         s = self.sessions.get(session_id)
         if s is None or s.state != SessionState.RUNNING:
             return
+        if s.async_cfg is not None:
+            return      # async sessions have no round barrier to report to
         if round_idx is not None and round_idx != s.round_idx:
             return                           # stale readiness: discard
         st = ClientStats.from_dict(stats) if stats else None
@@ -166,6 +170,30 @@ class Coordinator:
         if rnd == self._pending_cut[sid]:
             self._close_cut_round(sid, rnd)
 
+    def _on_async_global(self, topic: str, payload) -> None:
+        """Async-session bookkeeping: every minted global bumps the
+        session's version counter; at ``fl_rounds`` versions the session
+        terminates (the async analogue of the round budget)."""
+        sid = topic.split("/")[2]
+        s = self.sessions.get(sid)
+        if s is None or s.async_cfg is None \
+                or s.state != SessionState.RUNNING:
+            return
+        body = payload["a"][0] if isinstance(payload, dict) and "a" in payload \
+            else payload
+        ver = body.get("version", 0) if isinstance(body, dict) else 0
+        if ver > s.round_idx:
+            s.round_idx = ver
+            s.history.append({"round": ver, "participants":
+                              sorted(s.contributors)})
+            if self.on_round_complete:
+                self.on_round_complete(sid, ver)
+        if 0 < s.fl_rounds <= ver:
+            s.state = SessionState.TERMINATED
+            self.fc.unbind(T.global_model(sid))
+            self._broadcast_status(sid, {"event": "session_terminated",
+                                         "rounds": ver})
+
     # ------------------------------------------------------------------
     # Orchestration
     # ------------------------------------------------------------------
@@ -190,6 +218,13 @@ class Coordinator:
         s.state = SessionState.CLUSTERING
         self._arrange(session_id, rearrange=False)
         s.state = SessionState.RUNNING
+        if s.async_cfg is not None:
+            # K-of-N mode: no round barrier.  The coordinator only watches
+            # the global topic to track minted versions and terminate the
+            # session once the version budget (fl_rounds) is spent.
+            self.fc.subscribe_raw(T.global_model(session_id),
+                                  self._on_async_global)
+            return
         self._broadcast_status(session_id, {"event": "round_start",
                                             "round": s.round_idx})
         self._arm_round(session_id)
@@ -235,10 +270,13 @@ class Coordinator:
         # publish the topology on the session topic (paper Fig. 5a); the
         # session's aggregation strategy rides along (retained), so late
         # joiners and every aggregator agree on the reduction semantics
-        self.fc.call(T.session_status(session_id),
-                     {"event": "topology", "tree": tree.describe(),
-                      "strategy": s.strategy,
-                      "round": s.round_idx}, retain=True)
+        status = {"event": "topology", "tree": tree.describe(),
+                  "strategy": s.strategy, "round": s.round_idx}
+        if s.async_cfg is not None:
+            # admission rules + live cohort size for every async aggregator
+            status["async"] = {**s.async_cfg,
+                               "cohort": len(s.contributors)}
+        self.fc.call(T.session_status(session_id), status, retain=True)
         for cid, st in s.contributors.items():
             if cid in new_assign and new_assign[cid].duties:
                 st.rounds_as_aggregator += 1

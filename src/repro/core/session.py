@@ -39,6 +39,7 @@ class FLSession:
     created_at: float = 0.0            # SimClock stamp at creation
     round_started_at: float = 0.0      # SimClock stamp of the current round
     round_deadline_s: float = 0.0      # straggler deadline (0 = none)
+    async_cfg: Optional[dict] = None   # async admission rules (None = sync)
     history: list[dict] = field(default_factory=list)
 
     def join(self, client_id: str, stats: ClientStats,
@@ -90,5 +91,6 @@ class FLSession:
             "session_id": self.session_id, "model_name": self.model_name,
             "state": self.state.value, "round": self.round_idx,
             "fl_rounds": self.fl_rounds, "strategy": self.strategy,
+            "async": self.async_cfg,
             "contributors": sorted(self.contributors),
         }

@@ -8,6 +8,9 @@ Layout:
                                             cluster head subscribed here
     sdflmq/session/<sid>/global             parameter-server global model
                                             (retained so late joiners sync)
+    sdflmq/session/<sid>/gossip/<cid>       async-mode head gossip: cluster
+                                            heads exchange model views so
+                                            partitioned sites keep converging
 """
 from __future__ import annotations
 
@@ -32,6 +35,14 @@ def cluster_agg(sid: str, cluster_id: str) -> str:
 
 def global_model(sid: str) -> str:
     return f"{ROOT}/session/{sid}/global"
+
+
+def gossip(sid: str, client_id: str) -> str:
+    return f"{ROOT}/session/{sid}/gossip/{client_id}"
+
+
+def gossip_all(sid: str) -> str:
+    return f"{ROOT}/session/{sid}/gossip/+"
 
 
 def will(client_id: str) -> str:

@@ -1,0 +1,472 @@
+"""Async-FL property/unit wall (repro.api.async_fl).
+
+Pins the FedBuff semantics:
+  (a) staleness bound = inf with K = cohort reproduces the synchronous
+      round protocol *bit-identically* (fedavg and fedprox, any topology);
+  (b) contributions older than the staleness bound are always rejected and
+      counted — never folded into a buffer;
+  (c) staleness-discount weights are order-invariant for a fixed admitted
+      set (the buffer is a weighted mean, not a sequence);
+plus per-client pacing, gossip merge rules, the poly discount variants,
+and the churn-aware masked robust combines shared with the compiled path.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import Federation
+from repro.api.async_fl import AsyncBuffer, AsyncConfig, head_share, \
+    resolve_discount
+from repro.api.strategies import get_strategy
+from repro.core import topics as T
+
+
+def make_pair(n, strategy, rounds, levels=3, ratio=0.4, k=None, bound=None,
+              **async_kw):
+    """A synchronous session and its async twin on separate federations."""
+    def mk(async_mode):
+        fed = Federation(aggregator_ratio=ratio, levels=levels)
+        clients = [fed.client(f"c{i}") for i in range(n)]
+        return fed, fed.create_session(
+            "s", "m", rounds=rounds, participants=clients,
+            strategy=strategy, async_mode=async_mode)
+    sync = mk(None)
+    asyn = mk(dict(buffer_k=k if k is not None else n,
+                   staleness_bound=bound, **async_kw))
+    return sync, asyn
+
+
+def drift_train(n, seed):
+    rng = np.random.default_rng(seed)
+    drift = {f"c{i}": rng.normal(size=(5,)).astype(np.float32)
+             for i in range(n)}
+    weights = {f"c{i}": int(rng.integers(1, 9)) for i in range(n)}
+
+    def train(cid, g, r):
+        base = np.zeros(5, np.float32) if g is None else np.asarray(g["w"])
+        return {"w": (base * np.float32(0.6) + drift[cid])}, weights[cid]
+    return train
+
+
+# ---------------------------------------------------------------------------
+# (a) Async == sync bit-identity at K = cohort, bound = inf
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(3, 10), seed=st.integers(0, 100),
+       strategy=st.sampled_from(["fedavg", "fedprox"]))
+def test_property_async_equivalence_bit_identical(n, seed, strategy):
+    """With an unlimited staleness bound and buffer K = cohort size, every
+    trigger point and every accumulation order coincides with the
+    synchronous path: the minted globals must be bit-identical, version by
+    version."""
+    rng = np.random.default_rng(seed)
+    levels = int(rng.integers(2, 4))
+    ratio = float(rng.uniform(0.25, 0.6))
+    rounds = 2
+    (f1, s1), (f2, s2) = make_pair(n, strategy, rounds,
+                                   levels=levels, ratio=ratio)
+    train = drift_train(n, seed)
+    init = {"w": np.zeros(5, np.float32)}
+    sync_g, async_g = [], []
+    s1.on_global_update = lambda p, v: sync_g.append((v, np.array(p["w"])))
+    s2.on_global_update = lambda p, v: async_g.append((v, np.array(p["w"])))
+    s1.run(train, initial_params=init)
+    rep = s2.run_async(train, initial_params=init, max_time_s=60.0)
+    assert rep.final_state == "terminated" and not rep.stalled
+    assert [v for v, _ in async_g] == [v for v, _ in sync_g]
+    for (_, a), (_, b) in zip(sync_g, async_g):
+        np.testing.assert_array_equal(a, b)
+    assert rep.rejected_stale == 0
+
+
+def test_async_equivalence_legacy_wire_too():
+    """The bit-identity also holds on the legacy msgpack wire."""
+    def mk(async_mode):
+        fed = Federation(aggregator_ratio=0.4, wire_format="legacy")
+        clients = [fed.client(f"c{i}") for i in range(5)]
+        return fed.create_session("s", "m", rounds=2, participants=clients,
+                                  async_mode=async_mode)
+    train = drift_train(5, 3)
+    init = {"w": np.zeros(5, np.float32)}
+    s1, s2 = mk(None), mk(dict(buffer_k=5))
+    got = {}
+    s1.on_global_update = lambda p, v: got.setdefault(("s", v), np.array(p["w"]))
+    s2.on_global_update = lambda p, v: got.setdefault(("a", v), np.array(p["w"]))
+    s1.run(train, initial_params=init)
+    s2.run_async(train, initial_params=init)
+    for v in (1, 2):
+        np.testing.assert_array_equal(got[("s", v)], got[("a", v)])
+
+
+# ---------------------------------------------------------------------------
+# (b) Bounded staleness: older-than-bound is always rejected and counted
+# ---------------------------------------------------------------------------
+
+def _root_and_cluster(fed, session):
+    """The root aggregator client + its root duty's cluster id."""
+    desc = session.tree().describe()
+    top = desc["levels"][-1][0]
+    root = session.participants[top["head"]]
+    return root, top["id"]
+
+
+def _async_session(n=6, strategy="fedavg", k=None, bound=None, rounds=50,
+                   **kw):
+    fed = Federation(aggregator_ratio=0.4)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    session = fed.create_session(
+        "s", "m", rounds=rounds, participants=clients, strategy=strategy,
+        async_mode=dict(buffer_k=k if k is not None else n,
+                        staleness_bound=bound, **kw))
+    return fed, session
+
+
+@settings(max_examples=15, deadline=None)
+@given(bound=st.integers(0, 5), seed=st.integers(0, 1000))
+def test_property_stale_beyond_bound_always_rejected_and_counted(bound, seed):
+    rng = np.random.default_rng(seed)
+    fed, session = _async_session(n=6, bound=bound)
+    root, cid = _root_and_cluster(fed, session)
+    ctx = root.models.sessions["s"]
+    ctx.global_version = now = 10
+    topic = T.cluster_agg("s", cid)
+    rejected = admitted = 0
+    for i in range(5):                  # < buffer_k: no flush interference
+        stamp = now - int(rng.integers(0, 9))
+        root._on_cluster_input(topic, {
+            "params": {"w": np.ones(3, np.float32)}, "weight": 1.0,
+            "sender": f"x{i}", "partial": False, "round": stamp})
+        if now - stamp > bound:
+            rejected += 1
+        else:
+            admitted += 1
+        buf = ctx.async_bufs[cid]
+        assert buf.rejected_stale == rejected
+        assert buf.contribs == admitted
+        assert ctx.async_rejected == rejected
+        assert ctx.async_admitted == admitted
+    acc = ctx.accs[cid]
+    assert acc.received == admitted     # nothing stale touched the buffer
+
+
+def test_stale_partial_rejected_by_min_stamp():
+    """A partial held in transit past the bound (partition heal) is dropped
+    whole — its contribution count lands in the rejection counters."""
+    fed, session = _async_session(n=6, bound=1)
+    root, cid = _root_and_cluster(fed, session)
+    ctx = root.models.sessions["s"]
+    ctx.global_version = 10
+    root._on_cluster_input(T.cluster_agg("s", cid), {
+        "params": {"w": np.ones(3, np.float32)}, "weight": 2.0,
+        "sender": "h", "partial": True, "round": 8, "contribs": 3,
+        "stamp": 8})
+    assert ctx.async_rejected == 3
+    assert cid not in ctx.accs or ctx.accs[cid].received == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) Staleness-discount weights are order-invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), a=st.floats(0.1, 2.0))
+def test_property_discount_weights_order_invariant(seed, a):
+    """For a fixed admitted set, feeding the root buffer in any order mints
+    the same global (weighted mean) and the same total weight."""
+    rng = np.random.default_rng(seed)
+    m = 5
+    contribs = [({"w": rng.normal(size=(4,)).astype(np.float32)},
+                 float(rng.integers(1, 7)), 10 - int(rng.integers(0, 4)))
+                for _ in range(m)]
+
+    def run(order):
+        fed, session = _async_session(n=6, k=m, staleness_weight="poly",
+                                      poly_a=a)
+        root, cid = _root_and_cluster(fed, session)
+        ctx = root.models.sessions["s"]
+        ctx.global_version = 10
+        for i in order:
+            p, w, stamp = contribs[i]
+            root._on_cluster_input(T.cluster_agg("s", cid), {
+                "params": p, "weight": w, "sender": f"x{i}",
+                "partial": False, "round": stamp})
+        g = fed.param_server.get_global("s")
+        assert g is not None            # m-th admission triggered the mint
+        return np.array(g["params"]["w"])
+
+    fwd = run(list(range(m)))
+    perm = list(rng.permutation(m))
+    np.testing.assert_allclose(run(perm), fwd, rtol=1e-6, atol=1e-7)
+    # oracle: the discounted weighted mean, any order
+    lam = lambda s: (1.0 + s) ** (-a)
+    num = sum(np.asarray(p["w"], np.float64) * w * lam(10 - st_)
+              for p, w, st_ in contribs)
+    den = sum(w * lam(10 - st_) for _, w, st_ in contribs)
+    np.testing.assert_allclose(fwd, (num / den).astype(np.float32),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Discount plumbing
+# ---------------------------------------------------------------------------
+
+def test_poly_staleness_strategy_variants():
+    fa = get_strategy("fedavg_poly")
+    fp = get_strategy("fedprox_poly")
+    assert fa.staleness_discount(0) == 1.0
+    assert fa.staleness_discount(3) == pytest.approx(4.0 ** -0.5)
+    assert fp.staleness_discount(3) == pytest.approx(4.0 ** -0.5)
+    assert fp.needs_ref                      # still fedprox underneath
+    # base strategies stay constant-discount (bit-identity anchor)
+    assert get_strategy("fedavg").staleness_discount(99) == 1.0
+
+
+def test_resolve_discount_precedence():
+    strat = get_strategy("fedavg_poly")
+    assert resolve_discount({"weight": "strategy"}, strat)(3) \
+        == pytest.approx(4.0 ** -0.5)
+    assert resolve_discount({"weight": "constant"}, strat)(3) == 1.0
+    assert resolve_discount({"weight": "poly", "poly_a": 1.0},
+                            get_strategy("fedavg"))(3) == pytest.approx(0.25)
+    with pytest.raises(KeyError):
+        resolve_discount({"weight": "nope"}, strat)
+
+
+def test_head_share_reduces_to_sync_trigger_at_full_k():
+    assert head_share(3, 6, 6) == 3          # K = cohort -> expected
+    assert head_share(3, 3, 6) == 2          # proportional share
+    assert head_share(3, 1, 6) == 1
+    assert head_share(5, 2, 20) == 1         # never below 1
+    assert head_share(3, 99, 6) == 3         # never above expected
+
+
+# ---------------------------------------------------------------------------
+# Pacing
+# ---------------------------------------------------------------------------
+
+def test_per_client_pacing_decouples_cadence():
+    """A straggler with a 6x period trains ~6x less often — and the
+    federation keeps minting instead of blocking on it."""
+    fed, session = _async_session(n=5, k=2, rounds=12,
+                                  base_period_s=1.0,
+                                  periods={"c4": 6.0})
+    fires = {f"c{i}": 0 for i in range(5)}
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(5)}
+
+    def train(cid, g, r):
+        fires[cid] += 1
+        return params[cid], 1
+
+    rep = session.run_async(train, max_time_s=60.0,
+                            initial_params={"w": np.zeros(3, np.float32)})
+    # a flush already triggered in the final cascade may mint one version
+    # past the budget before the termination broadcast lands — that race is
+    # inherent to K-of-N (and harmless)
+    assert rep.final_state == "terminated" and rep.updates >= 12
+    assert fires["c4"] <= fires["c0"] // 3   # straggler paced down
+    assert fires["c0"] >= 5                  # fast clients kept going
+
+
+def test_pacing_jitter_is_seeded_and_deterministic():
+    def timeline(seed):
+        fed, session = _async_session(n=4, k=2, rounds=6,
+                                      period_jitter_s=0.3, seed=seed)
+        params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+                  for i in range(4)}
+        rep = session.run_async(lambda c, g, r: (params[c], 1),
+                                max_time_s=60.0,
+                                initial_params={"w": np.zeros(3, np.float32)})
+        return rep.timeline
+    t_a, t_b, t_c = timeline(7), timeline(7), timeline(8)
+    assert t_a == t_b                        # same seed: same schedule
+    assert t_a != t_c                        # different seed: different
+
+
+# ---------------------------------------------------------------------------
+# Gossip merge rules
+# ---------------------------------------------------------------------------
+
+def _gossip_session():
+    fed, session = _async_session(n=6, k=3, gossip_period_s=1.0)
+    a, b = session.participants["c2"], session.participants["c3"]
+    return fed, session, a, b
+
+
+def test_gossip_adopts_strictly_newer_version():
+    fed, session, a, b = _gossip_session()
+    ctx = a.models.sessions["s"]
+    ctx.global_version, ctx.site_seq = 2, 0
+    ctx.view_params = {"w": np.zeros(3, np.float32)}
+    a._on_gossip(T.gossip("s", "c3"),
+                 {"params": {"w": np.full(3, 7.0, np.float32)},
+                  "version": 5, "site_seq": 2, "sender": "c3"})
+    assert ctx.global_version == 5 and ctx.site_seq == 2
+    np.testing.assert_array_equal(ctx.view_params["w"], np.full(3, 7.0))
+    assert ctx.gossip_adopts == 1
+
+
+def test_gossip_same_version_site_models_average_symmetrically():
+    fed, session, a, b = _gossip_session()
+    ctx = a.models.sessions["s"]
+    ctx.global_version, ctx.site_seq = 4, 1
+    ctx.view_params = {"w": np.full(3, 2.0, np.float32)}
+    a._on_gossip(T.gossip("s", "c3"),
+                 {"params": {"w": np.full(3, 6.0, np.float32)},
+                  "version": 4, "site_seq": 3, "sender": "c3"})
+    np.testing.assert_array_equal(ctx.view_params["w"], np.full(3, 4.0))
+    assert ctx.site_seq == 3 and ctx.gossip_merges == 1
+    # older version is ignored outright
+    a._on_gossip(T.gossip("s", "c3"),
+                 {"params": {"w": np.full(3, 99.0, np.float32)},
+                  "version": 3, "site_seq": 9, "sender": "c3"})
+    np.testing.assert_array_equal(ctx.view_params["w"], np.full(3, 4.0))
+    # own gossip echo is ignored
+    a._on_gossip(T.gossip("s", "c2"),
+                 {"params": {"w": np.full(3, 50.0, np.float32)},
+                  "version": 9, "site_seq": 0, "sender": "c2"})
+    assert ctx.global_version == 4
+
+
+def test_gossip_adopted_version_still_accepts_its_real_global():
+    """Learning a version through gossip must not mask the real global of
+    the same version: that publish carries the strategy reference (fedprox)
+    and any server state (fedadam) the gossip message did not."""
+    fed, session, a, b = _gossip_session()
+    ctx = a.models.sessions["s"]
+    ctx.strategy = "fedprox"                 # needs_ref strategy
+    ctx.global_version, ctx.site_seq = 2, 0
+    a._on_gossip(T.gossip("s", "c3"),
+                 {"params": {"w": np.full(3, 7.0, np.float32)},
+                  "version": 5, "site_seq": 0, "sender": "c3"})
+    assert ctx.global_version == 5 and ctx.version_from_gossip
+    # the real v5 global arrives later (e.g. released by heal): processed
+    a._on_global(T.global_model("s"),
+                 {"params": {"w": np.full(3, 7.0, np.float32)},
+                  "version": 5, "round": 5})
+    assert not ctx.version_from_gossip
+    assert ctx.global_params is not None     # proximal reference refreshed
+    np.testing.assert_array_equal(ctx.global_params["w"], np.full(3, 7.0))
+    # ...but only once: the next same-version echo is dropped again
+    a._on_global(T.global_model("s"),
+                 {"params": {"w": np.full(3, 9.0, np.float32)},
+                  "version": 5, "round": 5})
+    np.testing.assert_array_equal(ctx.params["w"], np.full(3, 7.0))
+
+
+def test_run_async_timeout_cancels_pacing_timers():
+    """Exiting on the time budget must quiesce the shared clock: no live
+    pacing/gossip timer series may keep publishing for the session."""
+    fed, session = _async_session(n=4, k=2, rounds=0,   # rounds=0: no
+                                  gossip_period_s=1.0)  # version budget
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(4)}
+    rep = session.run_async(lambda c, g, r: (params[c], 1),
+                            max_time_s=5.0,
+                            initial_params={"w": np.zeros(3, np.float32)})
+    assert rep.timed_out and session.state == "running"
+    assert all(t.cancelled for t in list(session._pacers.values())
+               + list(session._gossipers.values()))
+    v_exit = session.global_version()
+    # advance past the coordinator's (harmless) waiting-time expiry timer:
+    # nothing else may fire — no training, no mints, an empty heap after
+    fed.clock.advance(200.0)
+    assert session.global_version() == v_exit
+    assert fed.clock.pending() == 0, "timer series leaked past run_async"
+
+
+def test_real_global_supersedes_site_model():
+    fed, session, a, b = _gossip_session()
+    ctx = a.models.sessions["s"]
+    ctx.global_version, ctx.site_seq = 4, 3
+    ctx.view_params = {"w": np.full(3, 2.0, np.float32)}
+    a._on_global(T.global_model("s"),
+                 {"params": {"w": np.full(3, 1.0, np.float32)},
+                  "version": 5, "round": 5})
+    assert ctx.global_version == 5 and ctx.site_seq == 0
+    np.testing.assert_array_equal(ctx.view_params["w"], np.full(3, 1.0))
+    # a stale global echo (async mode) does not regress the view
+    a._on_global(T.global_model("s"),
+                 {"params": {"w": np.full(3, 9.0, np.float32)},
+                  "version": 4, "round": 4})
+    assert ctx.global_version == 5
+    np.testing.assert_array_equal(ctx.view_params["w"], np.full(3, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Churn-aware masked robust combines (shared with the compiled path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 12), seed=st.integers(0, 500),
+       name=st.sampled_from(["trimmed_mean", "coordinate_median"]))
+def test_property_masked_combine_ignores_dead_rows(n, seed, name):
+    """combine_masked over n rows with d dead ones == combine over the live
+    subset — a departed client's stale row cannot shift the statistic."""
+    rng = np.random.default_rng(seed)
+    strat = get_strategy(name)
+    live = int(rng.integers(1, n + 1))
+    vals = rng.normal(size=(n, 4, 2)).astype(np.float32)
+    vals[live:] = 1e6 * rng.normal(size=(n - live, 4, 2)).astype(np.float32)
+    w = np.zeros(n, np.float64)
+    w[:live] = rng.uniform(0.5, 5.0, size=live)
+    perm = rng.permutation(n)
+    got = strat.combine_masked({"x": vals[perm]}, w[perm], np)["x"]
+    want = strat.combine({"x": vals[:live]}, w[:live], np)["x"]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_masked_combine_all_dead_yields_zeros_not_sentinel():
+    vals = np.full((4, 3), 1e6, np.float32)
+    w = np.zeros(4, np.float64)
+    for name in ("trimmed_mean", "coordinate_median"):
+        got = get_strategy(name).combine_masked({"x": vals}, w, np)["x"]
+        np.testing.assert_array_equal(got, np.zeros(3, np.float32))
+
+
+def test_masked_combine_matches_unmasked_when_all_alive():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(8, 5)).astype(np.float32)
+    w = np.ones(8, np.float64)
+    for name in ("trimmed_mean", "coordinate_median"):
+        strat = get_strategy(name)
+        np.testing.assert_allclose(
+            strat.combine_masked({"x": vals}, w, np)["x"],
+            strat.combine({"x": vals}, w, np)["x"], rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------------
+
+def test_async_cfg_rides_topology_broadcast():
+    fed, session = _async_session(n=4, k=3, bound=2, gossip_period_s=2.0)
+    for cl in session.participants.values():
+        acfg = cl.models.sessions["s"].async_cfg
+        assert acfg is not None
+        assert acfg["k"] == 3 and acfg["bound"] == 2
+        assert acfg["cohort"] == 4
+        assert acfg["gossip_period_s"] == 2.0
+
+
+def test_sync_round_api_is_guarded():
+    fed, session = _async_session(n=3, k=2)
+    with pytest.raises(RuntimeError):
+        session.run_round(lambda c, g, r: ({"w": np.zeros(2)}, 1))
+    with pytest.raises(RuntimeError):
+        session.run(lambda c, g, r: ({"w": np.zeros(2)}, 1))
+
+
+def test_async_buffer_cycle_counters():
+    acc = object.__new__(type("X", (), {}))  # placeholder accumulator ref
+    buf = AsyncBuffer(acc)
+    buf.contribs += 2
+    buf.note_stamp(5)
+    buf.note_stamp(3)
+    buf.note_stamp(7)
+    assert buf.min_stamp == 3 and buf.contribs == 2
+    buf.start_cycle()
+    assert buf.min_stamp is None and buf.contribs == 0
+    assert buf.acc is acc

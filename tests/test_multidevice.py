@@ -169,3 +169,51 @@ for sched in (flat_schedule(n), tree):
 print("COMPILED STRATEGIES OK")
 '''
     assert "COMPILED STRATEGIES OK" in run_sub(code)
+
+
+@pytest.mark.slow
+def test_compiled_robust_combine_masks_dead_mesh_rows():
+    """Churn-aware masking regression: a departed client's stale mesh row
+    (carried at zero weight) must not shift the compiled trimmed-mean /
+    coordinate-median statistics — the combine must equal the numpy
+    reference over the *live* subset, even when the dead row holds
+    adversarially huge garbage."""
+    code = '''
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.api.strategies import get_strategy
+from repro.core.aggregation import aggregate_params
+from repro.core.topology import flat_schedule
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+n = 4
+rng = np.random.default_rng(1)
+pw = rng.normal(size=(n, 8, 6)).astype(np.float32)
+pb = rng.normal(size=(n, 5)).astype(np.float32)
+# client 3 departed: its row holds huge stale garbage at zero weight
+pw[3] = 1e6 * rng.normal(size=(8, 6)).astype(np.float32)
+pb[3] = -1e6 * np.ones(5, np.float32)
+params = {"w": jnp.asarray(pw), "b": jnp.asarray(pb)}
+specs = {"w": P("data", None, None), "b": P("data", None)}
+weights = jnp.asarray([1.0, 2.0, 3.0, 0.0])
+sched = flat_schedule(n)
+
+for name in ("trimmed_mean", "coordinate_median"):
+    strat = get_strategy(name)
+    with mesh:
+        out = jax.jit(lambda p, w: aggregate_params(
+            p, w, mesh, "data", sched, specs, strategy=name))(params, weights)
+    # oracle: the strategy over the live rows only
+    want_w = np.asarray(strat.combine({"w": pw[:3]},
+                                      np.asarray([1.0, 2.0, 3.0]), np)["w"])
+    want_b = np.asarray(strat.combine({"b": pb[:3]},
+                                      np.asarray([1.0, 2.0, 3.0]), np)["b"])
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(out["w"])[i], want_w,
+                                   rtol=2e-5, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(np.asarray(out["b"])[i], want_b,
+                                   rtol=2e-5, atol=1e-6, err_msg=name)
+    assert np.abs(np.asarray(out["w"])).max() < 1e4, name
+print("MASKED ROBUST COMBINE OK")
+'''
+    assert "MASKED ROBUST COMBINE OK" in run_sub(code)

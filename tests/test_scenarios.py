@@ -361,6 +361,146 @@ def test_zero_delay_event_path_is_bit_identical_to_immediate_pump():
 
 
 # ---------------------------------------------------------------------------
+# Async federation under chaos (repro.api.async_fl)
+# ---------------------------------------------------------------------------
+
+_TARGETS = {f"c{i}": float(i) for i in range(8)}
+
+
+def _pull_train(cid, g, r):
+    """Contractive dynamics: pull the global toward this client's target —
+    the fixed point of the admitted mix, so reconvergence is measurable."""
+    base = np.zeros(4, np.float32) if g is None else np.asarray(g["w"])
+    tgt = np.full(4, _TARGETS.get(cid, 3.0), np.float32)
+    return {"w": (base + np.float32(0.4) * (tgt - base))}, 1
+
+
+def _async_session(strategy, n=6, versions=12, seed=7, gossip=0.0,
+                   **async_kw):
+    fed = Federation(latency=dict(delay_s=0.01, jitter_s=0.005, seed=42),
+                     aggregator_ratio=0.4)
+    sim = StatsSimulator([f"c{i}" for i in range(n + 2)], seed=9)
+    clients = [fed.client(f"c{i}", stats=sim.sample(f"c{i}", 0))
+               for i in range(n)]
+    async_kw.setdefault("buffer_k", 3)
+    async_kw.setdefault("staleness_bound", 4)
+    async_kw.setdefault("base_period_s", 1.0)
+    async_kw.setdefault("period_jitter_s", 0.1)
+    async_kw.setdefault("seed", seed)
+    session = fed.create_session(
+        "s", "m", rounds=versions, participants=clients, strategy=strategy,
+        capacity=(n, n + 2),
+        async_mode=dict(gossip_period_s=gossip, **async_kw))
+    session.start()
+    return fed, session
+
+
+def _async_events(kind, fed, session, n=6):
+    if kind == "reorder":
+        for i in range(n):                  # reversed arrival order
+            fed.transport.set_link(f"c{i}", delay_s=0.01 * (n - i))
+        return []
+    if kind == "partition_heal":
+        return [scenarios.partition(
+            [[f"c{i}" for i in range(n // 2)],
+             [f"c{i}" for i in range(n // 2, n)]], t0=2.0, t1=6.0)]
+    if kind == "churn":
+        return [scenarios.churn(fail_at={2: ["c5"]}, join_at={4: ["c6"]},
+                                straggle_at={3: {"c1": 0.3}})]
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "trimmed_mean"])
+@pytest.mark.parametrize("kind", ["reorder", "partition_heal", "churn"])
+def test_async_scenario_matrix_completes_with_finite_globals(kind, strategy):
+    versions = 10
+    fed, session = _async_session(strategy, versions=versions)
+    events = _async_events(kind, fed, session)
+    report = scenarios.play_async(
+        session, _pull_train, events=events, max_time_s=200.0,
+        initial_params={"w": np.zeros(4, np.float32)})
+    assert not report.stalled and not report.timed_out
+    assert report.final_state == "terminated"
+    assert report.updates >= versions
+    g = session.global_params()
+    assert g is not None and np.isfinite(g["w"]).all()
+    assert report.admitted > 0
+    if kind == "churn":
+        assert "c5" not in session.contributors()
+        assert "c6" in session.contributors()
+
+
+def test_async_gossip_under_partition_reconverges():
+    """2-site partition with head gossip: the root's side keeps minting
+    real globals, the other side keeps converging on gossiped site models,
+    and after heal the federation reconverges to within tolerance of the
+    never-partitioned run — deterministically."""
+    def run(partitioned):
+        fed, session = _async_session("fedavg", versions=25, gossip=1.5,
+                                      period_jitter_s=0.0)
+        tail = []
+        session.on_global_update = \
+            lambda p, v: tail.append((v, float(np.mean(p["w"]))))
+        # partition along the leaf-cluster boundary: the side without the
+        # root is a complete cluster with its own head
+        desc = session.tree().describe()
+        root = desc["levels"][-1][0]["head"]
+        other = next(c for c in desc["levels"][0] if root not in c["members"])
+        side_b = list(other["members"])
+        side_a = [c for c in session.contributors() if c not in side_b]
+        events = [scenarios.partition([side_a, side_b], t0=2.0, t1=8.0)] \
+            if partitioned else []
+        report = scenarios.play_async(
+            session, _pull_train, events=events, max_time_s=300.0,
+            initial_params={"w": np.zeros(4, np.float32)})
+        return session, report, tail
+
+    s0, r0, tail0 = run(False)
+    s1, r1, tail1 = run(True)
+    assert r1.final_state == "terminated" and not r1.stalled
+    # rounds kept completing through the partition window
+    assert r1.partition_held > 0
+    assert r1.site_updates > 0          # the root-less side kept updating
+    assert r1.gossip_merges + r1.gossip_adopts > 0
+    assert r1.rejected_stale > 0        # held traffic was bounded-stale cut
+    # reconvergence: the post-heal tail settles near the never-partitioned
+    # run's tail (both near the all-target mean)
+    tm0 = np.mean([m for _, m in tail0[-6:]])
+    tm1 = np.mean([m for _, m in tail1[-6:]])
+    assert abs(tm0 - tm1) < 0.5, (tm0, tm1)
+    # deterministic: the same seeds replay bit-identically
+    s2, r2, tail2 = run(True)
+    np.testing.assert_array_equal(s1.global_params()["w"],
+                                  s2.global_params()["w"])
+    assert r1.timeline == r2.timeline
+    assert (r1.rejected_stale, r1.site_updates, r1.gossip_merges) \
+        == (r2.rejected_stale, r2.site_updates, r2.gossip_merges)
+
+
+def test_async_schedule_two_seed_determinism():
+    """Same seed -> identical async event schedule (timeline, counters,
+    bit-identical global); different seed -> a different schedule that
+    still completes."""
+    def run(seed):
+        fed, session = _async_session("fedavg", versions=8, seed=seed,
+                                      period_jitter_s=0.25)
+        report = scenarios.play_async(
+            session, _pull_train, max_time_s=120.0,
+            initial_params={"w": np.zeros(4, np.float32)})
+        return np.array(session.global_params()["w"]), report
+
+    g_a, r_a = run(3)
+    g_b, r_b = run(3)
+    g_c, r_c = run(4)
+    np.testing.assert_array_equal(g_a, g_b)
+    assert r_a.timeline == r_b.timeline
+    assert (r_a.admitted, r_a.rejected_stale, r_a.virtual_time_s) \
+        == (r_b.admitted, r_b.rejected_stale, r_b.virtual_time_s)
+    assert r_c.final_state == "terminated"
+    assert r_a.timeline != r_c.timeline     # jitter reseeded the schedule
+
+
+# ---------------------------------------------------------------------------
 # Cross-broker bridge lag
 # ---------------------------------------------------------------------------
 
