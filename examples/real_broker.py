@@ -1,0 +1,101 @@
+"""Quickstart over a *real* MQTT broker.
+
+The same Listing-1 scenario as ``examples/quickstart.py``, but every byte
+— control plane and model plane — crosses actual MQTT 3.1.1 over TCP
+instead of the in-process ``SimBroker``.  By default the script launches
+the bundled hermetic mini-broker on an ephemeral port; point ``--broker``
+at any MQTT endpoint (e.g. a local ``mosquitto``) to run against real
+infrastructure:
+
+    PYTHONPATH=src python examples/real_broker.py
+    PYTHONPATH=src python examples/real_broker.py --broker localhost:1883
+
+The script then re-runs the identical workload on ``SimBroker`` and
+asserts the final fedavg global is **bit-identical** — the certified
+Transport contract plus deterministic per-publish settling means the real
+network path is a drop-in swap, not an approximation.
+"""
+import argparse
+
+import numpy as np
+
+from repro.api import Federation
+from repro.api.mini_broker import MiniBroker
+from repro.api.mqtt_transport import PahoTransport, paho_available
+from repro.data.federated import FederatedMNIST
+from repro.train.mlp import accuracy, init_mlp, train_epochs
+
+FL_ROUNDS = 2
+N_CLIENTS = 5
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--broker", default=None, metavar="HOST:PORT",
+                    help="external MQTT broker (default: launch the "
+                         "bundled mini-broker)")
+parser.add_argument("--backend", default="auto",
+                    choices=["auto", "paho", "builtin"],
+                    help="MQTT client backend (auto = paho when installed)")
+args = parser.parse_args()
+
+data = FederatedMNIST(N_CLIENTS, frac_per_client=0.01, total=10000)
+xt, yt = data.test
+
+
+def train(client_id, global_params, round_idx):
+    i = int(client_id.rsplit("_", 1)[1])
+    x, y = data.client_data(i)
+    local = train_epochs(global_params, x, y, epochs=5, seed=round_idx)
+    return local, data.n_samples(i)
+
+
+def run(transport=None, label="SimBroker"):
+    fed = Federation(transport=transport)
+    clients = [fed.client(f"client_{i}",
+                          preferred_role="aggregator" if i == 0 else "trainer")
+               for i in range(N_CLIENTS)]
+    session = fed.create_session("session_01", model_name="mlp",
+                                 rounds=FL_ROUNDS, participants=clients)
+    session.on_global_update = lambda params, version: print(
+        f"  [{label}] global v{version}: "
+        f"test acc {accuracy(params, xt, yt):.3f}")
+    session.run(train, initial_params=init_mlp(seed=0))
+    final = session.global_params()
+    stats = fed.broker.sys_stats()
+    fed.close()
+    return final, stats
+
+
+# --- leg 1: the bundled mini-broker (or an external one) ------------------
+mini = None
+if args.broker:
+    host, _, port = args.broker.rpartition(":")
+    transport = PahoTransport(host=host or "127.0.0.1", port=int(port),
+                              backend=args.backend)
+else:
+    mini = MiniBroker(port=0).start()
+    print(f"mini-broker listening on 127.0.0.1:{mini.port}")
+    transport = PahoTransport(port=mini.port, backend=args.backend)
+
+print(f"MQTT client backend: {transport.backend} "
+      f"(paho installed: {paho_available()})")
+mqtt_final, mqtt_stats = run(transport, label="MQTT")
+print(f"MQTT leg: {mqtt_stats['publishes']} publishes, "
+      f"{mqtt_stats['bytes_out']} bytes out, "
+      f"{mqtt_stats['barrier_rounds']} flush-barrier rounds")
+if mini is not None:
+    b = mini.sys_stats()
+    print(f"mini-broker routed {b['messages_sent']} messages "
+          f"({b['bytes_received']} bytes in)")
+    mini.stop()
+
+# --- leg 2: the in-process simulator, same workload -----------------------
+sim_final, _ = run(label="sim")
+
+# --- the deployment claim: a drop-in swap, bit for bit --------------------
+assert sorted(sim_final) == sorted(mqtt_final)
+for k in sim_final:
+    a, b = np.asarray(sim_final[k]), np.asarray(mqtt_final[k])
+    assert a.dtype == b.dtype and (a == b).all(), \
+        f"{k}: real-broker global diverged from SimBroker"
+print(f"final global over MQTT is bit-identical to SimBroker "
+      f"({len(sim_final)} tensors) — transport swap certified")

@@ -16,6 +16,9 @@ Submodules:
     transport  — Transport protocol + LatencyTransport edge-network model
     async_fl   — AsyncFederatedSession: bounded-staleness FedBuff buffers,
                  per-client pacing, head gossip under partitions
+    mqtt_transport — PahoTransport: the Transport protocol over a real
+                 MQTT broker (paho-mqtt or the bundled stdlib client)
+    mini_broker — hermetic in-process MQTT 3.1.1 broker for CI/dev
 
 Heavy imports are lazy (PEP 562) so core modules can import
 ``repro.api.strategies`` without dragging in the full facade.
@@ -33,6 +36,8 @@ _EXPORTS = {
     "LatencyTransport": ("repro.api.transport", "LatencyTransport"),
     "LinkModel": ("repro.api.transport", "LinkModel"),
     "SimClock": ("repro.api.transport", "SimClock"),
+    "PahoTransport": ("repro.api.mqtt_transport", "PahoTransport"),
+    "MiniBroker": ("repro.api.mini_broker", "MiniBroker"),
     "AsyncConfig": ("repro.api.async_fl", "AsyncConfig"),
     "AsyncFederatedSession": ("repro.api.async_fl", "AsyncFederatedSession"),
     "AsyncReport": ("repro.api.async_fl", "AsyncReport"),

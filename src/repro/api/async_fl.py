@@ -56,7 +56,21 @@ from repro.api.federation import FederatedSession, TrainFn
 class AsyncConfig:
     """Knobs of one asynchronous session (serialized into the retained
     topology broadcast, so every aggregator applies the same admission
-    rules — ``cohort`` is stamped in by the coordinator)."""
+    rules — ``cohort`` is stamped in by the coordinator).
+
+    Pass an instance (or a dict of these fields, or ``True`` for the
+    defaults) as ``create_session(..., async_mode=...)`` to switch a
+    session to K-of-N FedBuff federation:
+
+    >>> from repro.api import AsyncConfig
+    >>> cfg = AsyncConfig(buffer_k=3, staleness_bound=2,
+    ...                   base_period_s=0.5)
+    >>> wire = cfg.to_wire()          # the admission-relevant subset
+    >>> wire["k"], wire["bound"]
+    (3, 2)
+    >>> AsyncConfig().staleness_bound is None     # default: unbounded
+    True
+    """
 
     buffer_k: int = 2                 # contributions that trigger a global
     staleness_bound: Optional[int] = None   # None = unbounded

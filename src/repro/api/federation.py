@@ -48,7 +48,29 @@ TrainFn = Callable[[str, Optional[Params], int], tuple[Params, int]]
 
 class Federation:
     """Owns the infrastructure of one federation: a transport, the
-    coordinator service, and the parameter server."""
+    coordinator service, and the parameter server.
+
+    The default transport is an in-process ``SimBroker`` (deterministic,
+    synchronous); pass ``transport=PahoTransport(...)`` to run the same
+    federation over a real MQTT broker, or ``latency=dict(...)`` to model
+    per-link edge networks on virtual time — the session code is
+    identical on all three.
+
+    >>> import numpy as np
+    >>> from repro.api import Federation
+    >>> fed = Federation()
+    >>> clients = [fed.client(f"c{i}") for i in range(3)]
+    >>> session = fed.create_session("demo", model_name="m", rounds=1,
+    ...                              participants=clients)
+    >>> def train(client_id, global_params, round_idx):
+    ...     value = float(client_id[1:]) + 1.0     # c0 -> 1.0, c1 -> 2.0 ...
+    ...     return {"w": np.full(2, value, np.float32)}, 1
+    >>> _ = session.run(train, initial_params={"w": np.zeros(2, np.float32)})
+    >>> session.global_params()["w"]               # fedavg mean of 1, 2, 3
+    array([2., 2.], dtype=float32)
+    >>> session.state, session.global_version()
+    ('terminated', 1)
+    """
 
     def __init__(self, transport: Optional[Transport] = None,
                  latency: Optional[dict] = None,
@@ -78,8 +100,11 @@ class Federation:
         elif clock is not None:
             # prebuilt LatencyTransport + explicit clock: rebase the (still
             # fresh) transport onto the caller's clock rather than silently
-            # ignoring it
+            # ignoring it (re-attaching any real-network inner transport)
             transport.clock = clock
+            attach = getattr(transport.inner, "attach_clock", None)
+            if attach is not None:
+                attach(clock)
         self.transport = transport
         self.clock = transport.clock
         self.coordinator = Coordinator(
@@ -98,6 +123,16 @@ class Federation:
         then ``clock.advance_to``/``session.step_time`` controls release)."""
         if not self.clock.held:
             self.clock.run_until_idle()
+
+    def close(self) -> None:
+        """Tear down the federation's transport connections.  A no-op for
+        the in-process simulators; against a real MQTT backend
+        (``PahoTransport``) this gracefully disconnects the pooled client
+        connections so the broker drops their sessions without firing
+        LWTs."""
+        close = getattr(self.transport, "close", None)
+        if close is not None:
+            close()
 
     # alias: the transport of a single-broker federation IS the broker
     @property

@@ -283,12 +283,41 @@ _REGISTRY: dict[str, Callable[[], AggregationStrategy]] = {}
 
 def register_strategy(name: str, factory: Callable[[], AggregationStrategy]):
     """Register a strategy factory under ``name`` (overwrites allowed so
-    users can re-tune hyperparameters, e.g. a different fedprox mu)."""
+    users can re-tune hyperparameters, e.g. a different fedprox mu).
+
+    >>> from repro.api.strategies import (AggregationStrategy,
+    ...                                   get_strategy, register_strategy)
+    >>> class Halving(AggregationStrategy):
+    ...     name = "halving"
+    ...     def finalize(self, mean, ref, state, xp):
+    ...         return {k: v / 2 for k, v in mean.items()}, state
+    >>> _ = register_strategy("halving", Halving)
+    >>> get_strategy("halving").name
+    'halving'
+    """
     _REGISTRY[name] = factory
     return factory
 
 
 def get_strategy(s: Union[str, AggregationStrategy]) -> AggregationStrategy:
+    """Resolve a name (or pass through an instance) from the registry.
+
+    >>> from repro.api.strategies import get_strategy
+    >>> get_strategy("fedavg").reduction           # decomposable: sums
+    'sum'
+    >>> get_strategy("trimmed_mean").reduction     # robust: full stacks
+    'stack'
+    >>> import numpy as np
+    >>> mean = {"w": np.array([2.0, 4.0])}
+    >>> new_global, state = get_strategy("fedavg").finalize(
+    ...     mean, None, None, np)
+    >>> new_global["w"]                            # fedavg: mean untouched
+    array([2., 4.])
+    >>> get_strategy("nope")                    # doctest: +ELLIPSIS
+    Traceback (most recent call last):
+        ...
+    KeyError: "unknown aggregation strategy 'nope'; have [...]"
+    """
     if isinstance(s, AggregationStrategy):
         return s
     try:
@@ -299,6 +328,12 @@ def get_strategy(s: Union[str, AggregationStrategy]) -> AggregationStrategy:
 
 
 def list_strategies() -> list[str]:
+    """Registered strategy names, sorted.
+
+    >>> from repro.api.strategies import list_strategies
+    >>> {"fedavg", "fedprox", "trimmed_mean"} <= set(list_strategies())
+    True
+    """
     return sorted(_REGISTRY)
 
 

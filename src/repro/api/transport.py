@@ -91,7 +91,21 @@ class SimClock:
     """Discrete-event virtual clock shared by transports, brokers, and the
     coordinator.  ``schedule`` enqueues an event; draining fires events in
     strict ``(time, insertion)`` order and advances ``now`` to each event's
-    timestamp — time never flows backwards."""
+    timestamp — time never flows backwards.
+
+    >>> from repro.api.transport import SimClock
+    >>> clock, order = SimClock(), []
+    >>> _ = clock.schedule(2.0, lambda: order.append("late"))
+    >>> _ = clock.schedule(1.0, lambda: order.append("early"))
+    >>> clock.run_until_idle()      # messages drain in timestamp order
+    >>> order, clock.now
+    (['early', 'late'], 2.0)
+    >>> _ = clock.schedule(5.0, lambda: order.append("alarm"), timer=True)
+    >>> clock.run_until_idle()      # timers wait for an explicit advance
+    >>> _ = clock.advance_to(5.0)
+    >>> order[-1]
+    'alarm'
+    """
 
     def __init__(self, now: float = 0.0):
         self.now = float(now)
@@ -100,6 +114,36 @@ class SimClock:
         self._held = 0
         self._draining = False
         self._idle_cbs: list[Callable] = []
+        # external event sources (real-network transports): polled during
+        # drains so "idle" also means "no real traffic in flight"
+        self._sources: list[Callable[[bool], bool]] = []
+
+    # ---- external sources ------------------------------------------------
+    def add_source(self, poll: Callable[[bool], bool]) -> None:
+        """Register an external event source — ``poll(block)`` must
+        dispatch any pending external events (e.g. inbound frames from a
+        real MQTT connection) and return whether it made progress.  With
+        ``block=True`` the source may wait for in-flight traffic to
+        surface (``PahoTransport`` runs its flush-barrier quiescence
+        protocol there).  Sources are polled during every drain, so
+        ``run_until_idle`` / ``advance_to`` transparently include real
+        network traffic, and idle callbacks fire only once both the event
+        heap AND every source are quiet."""
+        if poll not in self._sources:
+            self._sources.append(poll)
+
+    def remove_source(self, poll: Callable[[bool], bool]) -> None:
+        try:
+            self._sources.remove(poll)
+        except ValueError:
+            pass
+
+    def _poll_sources(self, block: bool) -> bool:
+        progressed = False
+        for poll in list(self._sources):
+            if poll(block):
+                progressed = True
+        return progressed
 
     # ---- scheduling ------------------------------------------------------
     def schedule(self, t: float, fn: Callable, timer: bool = False) -> _Event:
@@ -187,13 +231,27 @@ class SimClock:
         self._draining = True
         try:
             while True:
+                # external sources first (cheap non-blocking poll): inbound
+                # real-network frames dispatch before anything else, like
+                # queued SimBroker deliveries would
+                if self._sources and self._poll_sources(block=False):
+                    continue
                 # idle callbacks fire the moment no message events remain —
                 # checked before the next (possibly later) timer pops, so
-                # "the cascade settled" is observed at the right instant
+                # "the cascade settled" is observed at the right instant.
+                # With external sources, "settled" must include traffic
+                # still in flight on real sockets: block on the sources'
+                # quiescence protocol before declaring idle.
+                if self._idle_cbs and self._sources \
+                        and self.pending(timers=False) == 0 \
+                        and self._poll_sources(block=True):
+                    continue
                 if self._fire_idle_cbs():
                     continue
                 ev = self._pop_due(limit, timers)
                 if ev is None:
+                    if self._sources and self._poll_sources(block=True):
+                        continue
                     break
                 self.now = max(self.now, ev.time)
                 ev.fn()
@@ -276,7 +334,20 @@ class _LinkStats:
 
 class LatencyTransport:
     """Event-driven per-link delay/jitter/drop/partition decorator over a
-    Transport, scheduling deliveries on a shared ``SimClock``."""
+    Transport, scheduling deliveries on a shared ``SimClock``.
+
+    >>> from repro.api.transport import LatencyTransport
+    >>> from repro.core.broker import SimBroker
+    >>> t = LatencyTransport(SimBroker(), delay_s=0.05)
+    >>> got = []
+    >>> _ = t.connect("sub", lambda m: got.append(bytes(m.payload)))
+    >>> t.subscribe("sub", "sensors/+", qos=1)
+    >>> _ = t.publish("sensors/t1", b"21.5", qos=1, sender="edge-node")
+    >>> got                      # clock un-held: publish drained to idle
+    [b'21.5']
+    >>> t.clock.now              # ... after the modeled link delay
+    0.05
+    """
 
     def __init__(self, inner: Transport, delay_s: float = 0.0,
                  jitter_s: float = 0.0, drop_p: float = 0.0, seed: int = 0,
@@ -287,6 +358,11 @@ class LatencyTransport:
         self.seed = seed
         self._rngs: dict[str, random.Random] = {}
         self.clock = clock if clock is not None else SimClock()
+        # real-network inner transports (PahoTransport) register themselves
+        # as an external event source so clock drains pump their traffic
+        attach = getattr(inner, "attach_clock", None)
+        if attach is not None:
+            attach(self.clock)
         self.link_stats: dict[str, _LinkStats] = {}
         # partition state: list of disjoint client-id groups; traffic
         # between different groups is cut (ungrouped actors reach everyone)

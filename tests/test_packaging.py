@@ -1,0 +1,44 @@
+"""Packaging hygiene: no stale bytecode can shadow source.
+
+A ``.pyc`` committed (or left behind by a deleted module) can be imported
+*ahead of* — or instead of — the ``.py`` source, silently resurrecting
+dead code.  Two invariants keep that impossible:
+
+  * every imported ``repro`` module resolves from a ``.py`` file, never a
+    bytecode cache;
+  * the tree contains no legacy-location ``.pyc`` (importable directly)
+    and no orphaned ``__pycache__`` entry whose source was deleted.
+"""
+import pathlib
+import sys
+
+import repro
+
+# repro is a namespace package (no top-level __init__): locate via __path__
+SRC = pathlib.Path(list(repro.__path__)[0]).resolve()
+
+
+def test_imported_repro_modules_resolve_from_source():
+    import repro.api.federation  # noqa: F401  (pull in the facade chain)
+    import repro.core.broker     # noqa: F401
+    for name, mod in list(sys.modules.items()):
+        if not name.startswith("repro"):
+            continue
+        origin = getattr(getattr(mod, "__spec__", None), "origin", None)
+        if origin in (None, "namespace"):
+            continue
+        assert origin.endswith(".py"), \
+            f"{name} imported from bytecode: {origin}"
+
+
+def test_no_stray_or_orphaned_bytecode_in_src():
+    legacy = [p for p in SRC.rglob("*.py[co]")
+              if p.parent.name != "__pycache__"]
+    assert not legacy, f"legacy-location bytecode is importable: {legacy}"
+    orphans = []
+    for pyc in SRC.rglob("__pycache__/*.pyc"):
+        stem = pyc.name.split(".")[0]
+        if not (pyc.parent.parent / f"{stem}.py").exists():
+            orphans.append(pyc)
+    assert not orphans, \
+        f"orphaned __pycache__ entries (their source is gone): {orphans}"

@@ -1,0 +1,8 @@
+"""Collection shim: runs the shared Transport-conformance contract
+(``tests/transport_conformance.py``) under the default test session.
+
+The contract itself is parameterized over SimBroker, LatencyTransport,
+and PahoTransport-over-mini-broker (builtin + paho legs); the paho leg
+self-skips when the optional ``repro[mqtt]`` extra is not installed.
+"""
+from transport_conformance import *          # noqa: F401,F403

@@ -1,0 +1,365 @@
+"""Shared Transport-conformance contract (paper §III-B: what SDFLMQ needs
+from MQTT).
+
+One suite, parameterized over every ``repro.api.transport.Transport``
+backend — ``SimBroker``, ``LatencyTransport`` (event-driven delivery
+queue), and ``PahoTransport`` against the bundled in-process MQTT 3.1.1
+mini-broker (both the builtin stdlib client and, when the ``repro[mqtt]``
+extra is installed, real paho-mqtt) — so all backends are certified
+against one behavioral contract:
+
+  * exact-topic and wildcard (``+``/``#``) delivery, matching the
+    ``topic_matches`` oracle,
+  * the MQTT-4.7.2-1 rule: ``$``-topics are invisible to wildcard-rooted
+    filters but reachable by exact filters,
+  * per-sender FIFO ordering (one client's publishes never reorder),
+  * one delivery per client even under overlapping filters,
+  * retained messages: late-subscriber replay (with the retain bit set),
+    last-value-wins overwrite, empty-payload clear,
+  * last-will testament: published on ungraceful connection drop, silent
+    on graceful disconnect,
+  * unsubscribe and reconnect tearing down deliveries.
+
+The module is imported by ``tests/test_transport_conformance.py`` (the sim
+backends always run; the MQTT legs skip cleanly when their dependency is
+missing) and by the CI ``mqtt`` job, which runs all four legs.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.api.transport import LatencyTransport, SimClock
+from repro.core.broker import Message, SimBroker, topic_matches
+
+BACKENDS = [
+    "simbroker",
+    "latency",
+    pytest.param("mqtt-builtin", marks=pytest.mark.mqtt),
+    pytest.param("mqtt-paho", marks=pytest.mark.mqtt),
+]
+
+
+class Backend:
+    """One Transport implementation under test, plus the knob that makes
+    its delivery model uniform: ``settle()`` blocks until every in-flight
+    message has been dispatched to its subscriber callbacks."""
+
+    def __init__(self, label: str):
+        self.label = label
+        self._broker = None
+        if label == "simbroker":
+            self.transport = SimBroker()
+            self._settle = lambda: None
+        elif label == "latency":
+            clock = SimClock()
+            self.transport = LatencyTransport(
+                SimBroker(), delay_s=0.002, jitter_s=0.001, seed=7,
+                clock=clock)
+            self._settle = clock.run_until_idle
+        elif label in ("mqtt-builtin", "mqtt-paho"):
+            from repro.api.mini_broker import MiniBroker
+            from repro.api.mqtt_transport import PahoTransport, \
+                paho_available
+            if label == "mqtt-paho" and not paho_available():
+                pytest.skip("optional dependency paho-mqtt not installed "
+                            "(pip install 'repro-sdflmq[mqtt]')")
+            self._broker = MiniBroker(port=0).start()
+            self.transport = PahoTransport(
+                port=self._broker.port,
+                backend=label.removeprefix("mqtt-"))
+            self._settle = self.transport.settle
+        else:                                    # pragma: no cover
+            raise ValueError(label)
+
+    def settle(self) -> None:
+        self._settle()
+
+    def teardown(self) -> None:
+        if self._broker is not None:
+            self.transport.close()
+            self._broker.stop()
+
+    # -- helpers -----------------------------------------------------------
+    def collector(self, client_id: str, will: Message = None):
+        """Connect ``client_id`` with a recording callback; returns the
+        list of (topic, payload, qos, retain) tuples it receives."""
+        got: list[tuple] = []
+        self.transport.connect(
+            client_id,
+            lambda m: got.append((m.topic, bytes(m.payload), m.qos,
+                                  bool(m.retain))),
+            will=will)
+        return got
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request):
+    b = Backend(request.param)
+    yield b
+    b.teardown()
+
+
+def topics_of(got) -> list:
+    return [t for t, *_ in got]
+
+
+def payloads_of(got) -> list:
+    return [p for _, p, *_ in got]
+
+
+# ---------------------------------------------------------------------------
+# basic delivery + ordering
+# ---------------------------------------------------------------------------
+
+def test_exact_topic_roundtrip(backend):
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/room/1", qos=1)
+    backend.transport.publish("sdflmq/room/1", b"payload-1", qos=1,
+                              sender="pub")
+    backend.settle()
+    assert got == [("sdflmq/room/1", b"payload-1", 1, False)]
+
+
+def test_no_delivery_without_matching_subscription(backend):
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/a", qos=0)
+    backend.transport.publish("sdflmq/b", b"x", sender="pub")
+    backend.settle()
+    assert got == []
+
+
+def test_per_sender_fifo_ordering(backend):
+    """One client's publishes ride one ordered connection: they never
+    overtake each other, whatever the link model does."""
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/seq", qos=1)
+    for i in range(40):
+        backend.transport.publish("sdflmq/seq", f"m{i:03d}".encode(),
+                                  qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [f"m{i:03d}".encode() for i in range(40)]
+
+
+def test_self_delivery(backend):
+    """MQTT 3.1.1 has no noLocal: a publisher subscribed to the topic
+    receives its own message."""
+    got = backend.collector("node")
+    backend.transport.subscribe("node", "sdflmq/self", qos=1)
+    backend.transport.publish("sdflmq/self", b"me", qos=1, sender="node")
+    backend.settle()
+    assert payloads_of(got) == [b"me"]
+
+
+def test_fanout_to_all_matching_subscribers(backend):
+    got_a = backend.collector("a")
+    got_b = backend.collector("b")
+    got_c = backend.collector("c")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("a", "sdflmq/fan", qos=1)
+    backend.transport.subscribe("b", "sdflmq/fan", qos=1)
+    backend.transport.subscribe("c", "sdflmq/other", qos=1)
+    backend.transport.publish("sdflmq/fan", b"x", qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got_a) == [b"x"]
+    assert payloads_of(got_b) == [b"x"]
+    assert got_c == []
+
+
+def test_overlapping_filters_deliver_once(backend):
+    """A client holding several filters matching one topic gets exactly
+    one copy (first matching filter wins, as in SimBroker)."""
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/ov/+", qos=1)
+    backend.transport.subscribe("sub", "sdflmq/ov/x", qos=1)
+    backend.transport.subscribe("sub", "sdflmq/#", qos=1)
+    backend.transport.publish("sdflmq/ov/x", b"once", qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [b"once"]
+
+
+# ---------------------------------------------------------------------------
+# wildcard / $-topic rules
+# ---------------------------------------------------------------------------
+
+WILDCARD_CASES = [
+    ("sdflmq/+/agg", "sdflmq/c1/agg", True),
+    ("sdflmq/+/agg", "sdflmq/c1/status", False),
+    ("sdflmq/+/agg", "sdflmq/a/b/agg", False),
+    ("sdflmq/#", "sdflmq/session/s1/global", True),
+    ("sdflmq/#", "sdflmq", True),              # '#' covers the parent level
+    ("sdflmq/#", "other/x", False),
+    ("+/coord/create", "sdflmq/coord/create", True),
+    ("sdflmq/session/+/cluster/+/agg",
+     "sdflmq/session/s1/cluster/c0/agg", True),
+]
+
+
+@pytest.mark.parametrize("filt,topic,expect", WILDCARD_CASES)
+def test_wildcard_filter_semantics(backend, filt, topic, expect):
+    assert topic_matches(filt, topic) == expect     # oracle sanity
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", filt, qos=1)
+    backend.transport.publish(topic, b"w", qos=1, sender="pub")
+    backend.settle()
+    assert (payloads_of(got) == [b"w"]) == expect
+
+
+def test_dollar_topics_invisible_to_wildcards(backend):
+    """[MQTT-4.7.2-1]: filters starting with a wildcard never match topics
+    whose first level starts with '$'."""
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "#", qos=1)
+    backend.transport.subscribe("sub", "+/load", qos=1)
+    backend.transport.publish("$SYS/load", b"hidden", qos=1, sender="pub")
+    backend.transport.publish("plain/load", b"seen", qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [b"seen"]
+
+
+def test_dollar_topics_reachable_by_exact_filter(backend):
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "$SYS/broker/load", qos=1)
+    backend.transport.publish("$SYS/broker/load", b"42", qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [b"42"]
+
+
+# ---------------------------------------------------------------------------
+# retained messages
+# ---------------------------------------------------------------------------
+
+def test_retained_replay_to_late_subscriber(backend):
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.publish("sdflmq/topo", b"v1", qos=1, retain=True,
+                              sender="pub")
+    backend.settle()
+    got = backend.collector("late")
+    backend.transport.subscribe("late", "sdflmq/topo", qos=1)
+    backend.settle()
+    assert [(t, p, r) for t, p, _q, r in got] == \
+        [("sdflmq/topo", b"v1", True)]
+
+
+def test_retained_last_value_wins(backend):
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.publish("sdflmq/topo", b"v1", qos=1, retain=True,
+                              sender="pub")
+    backend.transport.publish("sdflmq/topo", b"v2", qos=1, retain=True,
+                              sender="pub")
+    backend.settle()
+    got = backend.collector("late")
+    backend.transport.subscribe("late", "sdflmq/#", qos=1)
+    backend.settle()
+    assert payloads_of(got) == [b"v2"]
+
+
+def test_retained_not_replayed_for_earlier_subscriptions(backend):
+    """[MQTT-3.3.1-6]: retained replay covers the filters of the NEW
+    subscribe only — a later subscribe to an unrelated filter must not
+    re-deliver retained state already replayed to an older filter."""
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.publish("sdflmq/topo", b"v1", qos=1, retain=True,
+                              sender="pub")
+    backend.settle()
+    got = backend.collector("sub")
+    backend.transport.subscribe("sub", "sdflmq/topo", qos=1)
+    backend.settle()
+    backend.transport.subscribe("sub", "sdflmq/unrelated", qos=1)
+    backend.settle()
+    assert payloads_of(got) == [b"v1"]      # exactly once, not re-replayed
+
+
+def test_retained_cleared_by_empty_payload(backend):
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.publish("sdflmq/topo", b"v1", qos=1, retain=True,
+                              sender="pub")
+    backend.transport.publish("sdflmq/topo", b"", qos=1, retain=True,
+                              sender="pub")
+    backend.settle()
+    got = backend.collector("late")
+    backend.transport.subscribe("late", "sdflmq/topo", qos=1)
+    backend.settle()
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# last-will testament
+# ---------------------------------------------------------------------------
+
+def test_lwt_fires_on_ungraceful_drop(backend):
+    got = backend.collector("watcher")
+    backend.transport.subscribe("watcher", "sdflmq/will/+", qos=1)
+    backend.collector("mortal",
+                      will=Message("sdflmq/will/mortal", b"gone", qos=1))
+    backend.settle()
+    backend.transport.disconnect("mortal", graceful=False)
+    backend.settle()
+    assert [(t, p) for t, p, *_ in got] == [("sdflmq/will/mortal", b"gone")]
+
+
+def test_lwt_silent_on_graceful_disconnect(backend):
+    got = backend.collector("watcher")
+    backend.transport.subscribe("watcher", "sdflmq/will/+", qos=1)
+    backend.collector("mortal",
+                      will=Message("sdflmq/will/mortal", b"gone", qos=1))
+    backend.settle()
+    backend.transport.disconnect("mortal", graceful=True)
+    backend.settle()
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# subscription lifecycle
+# ---------------------------------------------------------------------------
+
+def test_unsubscribe_stops_delivery(backend):
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/u", qos=1)
+    backend.transport.publish("sdflmq/u", b"one", qos=1, sender="pub")
+    backend.settle()
+    backend.transport.unsubscribe("sub", "sdflmq/u")
+    backend.transport.publish("sdflmq/u", b"two", qos=1, sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [b"one"]
+
+
+def test_reconnect_drops_old_subscriptions(backend):
+    got_old = backend.collector("node")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("node", "sdflmq/r", qos=1)
+    backend.settle()
+    got_new = backend.collector("node")     # clean-session reconnect
+    backend.transport.publish("sdflmq/r", b"after", qos=1, sender="pub")
+    backend.settle()
+    assert got_old == [] and got_new == []
+
+
+def test_qos0_delivery(backend):
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/q0", qos=0)
+    backend.transport.publish("sdflmq/q0", b"fire-and-forget", qos=0,
+                              sender="pub")
+    backend.settle()
+    assert payloads_of(got) == [b"fire-and-forget"]
+
+
+def test_sys_stats_exposed(backend):
+    """Every backend reports broker-side counters (shape is free, the
+    surface must exist and survive traffic)."""
+    got = backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/s", qos=1)
+    backend.transport.publish("sdflmq/s", b"x", qos=1, sender="pub")
+    backend.settle()
+    stats = backend.transport.sys_stats()
+    assert isinstance(stats, dict) and stats
+    assert payloads_of(got) == [b"x"]
