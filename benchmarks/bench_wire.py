@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import os
 import time
+import tracemalloc
 
 import numpy as np
 
@@ -120,10 +121,43 @@ def bench_e2e_round(n_clients: int = 8, mb: float = 1.0):
              "speedup_x": round(out["legacy"] / out["tb"], 1)})
 
 
+def bench_alloc_guard(n_clients: int = 6, mb: float = 0.25, rounds: int = 2):
+    """Telemetry must be free when off: with tracemalloc filtered to the
+    ``repro.obs`` source files, a steady-state metrics-off round loop
+    attributes ZERO allocations to the telemetry package (every hook is a
+    single ``if obs is not None`` branch).  Also reports the publisher-side
+    encode-arena reuse rate for the same loop."""
+    import repro.obs                     # imported, but must stay dormant
+    obs_dir = os.path.dirname(os.path.abspath(repro.obs.__file__))
+    params = _model(mb)
+    fed = Federation(levels=2, aggregator_ratio=0.5)
+    clients = [fed.client(f"c{i}") for i in range(n_clients)]
+    session = fed.create_session("s", "m", rounds=rounds + 1,
+                                 participants=clients)
+    session.run_round(lambda cid, g, r: (params, 1))       # warm arenas
+    tracemalloc.start()
+    for _ in range(rounds):
+        session.run_round(lambda cid, g, r: (params, 1))
+    snap = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    total = sum(s.count for s in snap.statistics("filename"))
+    obs_allocs = sum(
+        s.count for s in snap.filter_traces(
+            [tracemalloc.Filter(True, os.path.join(obs_dir, "*"))]
+        ).statistics("filename"))
+    ws = clients[0].fc.wire_stats()
+    return ("wire_alloc_guard", float(obs_allocs),
+            {"obs_allocs": obs_allocs, "total_alloc_blocks": total,
+             "rounds": rounds, "clients": n_clients,
+             "arena_reuse_hits": ws["arena_reuse_hits"],
+             "arena_grows": ws["arena_grows"]})
+
+
 def run(verbose: bool = True):
     mb = 1.0 if SMOKE else 4.0
     rows = [bench_serialize(mb=mb), bench_aggregate(mb=mb),
-            bench_e2e_round(mb=0.5 if SMOKE else 1.0)]
+            bench_e2e_round(mb=0.5 if SMOKE else 1.0),
+            bench_alloc_guard(mb=0.1 if SMOKE else 0.25)]
     if verbose:
         for name, us, d in rows:
             print(f"  {name}: {d}")

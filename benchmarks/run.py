@@ -34,6 +34,27 @@ SUITES = [
 ]
 
 
+def _obs_registry_probe() -> dict:
+    """One instrumented mini-round: record the telemetry registry's shape
+    (series count, subsystems covered, trace volume) into the bench JSON so
+    the observability surface is tracked per PR alongside the perf rows."""
+    import numpy as np
+    from repro.api import Federation
+    fed = Federation(metrics=True)
+    clients = [fed.client(f"c{i}") for i in range(4)]
+    session = fed.create_session("s", "m", rounds=1, participants=clients)
+    p = {"w": np.ones(64, np.float32)}
+    session.run_round(lambda cid, g, r: (p, 1))
+    snap = fed.metrics.snapshot()
+    return {
+        "series": fed.metrics.series_count(),
+        "families": len(snap),
+        "subsystems": sorted({name.split("_")[1] for name in snap}),
+        "trace_events": fed.tracer.emitted,
+        "trace_kinds": fed.tracer.kinds(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
@@ -57,6 +78,11 @@ def main() -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{json.dumps(derived)}")
             all_rows.setdefault(name, {"us": round(us, 1), **derived})
+    if not args.suite or args.suite == "wire_data_plane":
+        try:
+            all_rows["obs_registry"] = _obs_registry_probe()
+        except Exception as e:                       # never fail the run
+            all_rows["obs_registry"] = {"error": str(e)[:200]}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(all_rows, f, indent=1, sort_keys=True)

@@ -10,7 +10,13 @@ try ``python examples/quickstart.py trimmed_mean`` (robust to a poisoned
 client) or ``fedadam`` (server-side adaptive optimizer).
 
     PYTHONPATH=src python examples/quickstart.py [strategy]
+
+Telemetry (optional): set ``SDFLMQ_METRICS_PORT`` to enable metrics and
+serve Prometheus ``/metrics`` + ``/timeline.json`` on that port after the
+run (held open for ``SDFLMQ_METRICS_HOLD_S`` seconds, default 10);
+``SDFLMQ_TIMELINE_PATH`` additionally writes the round-trace JSON there.
 """
+import os
 import sys
 
 from repro.api import Federation, list_strategies
@@ -21,12 +27,13 @@ FL_ROUNDS = 2
 N_CLIENTS = 5
 STRATEGY = sys.argv[1] if len(sys.argv) > 1 else "fedavg"
 assert STRATEGY in list_strategies(), f"pick one of {list_strategies()}"
+METRICS_PORT = os.environ.get("SDFLMQ_METRICS_PORT")
 
 data = FederatedMNIST(N_CLIENTS, frac_per_client=0.01, total=10000)
 xt, yt = data.test
 
 # --- one entry point: broker + coordinator + parameter server ------------
-fed = Federation()
+fed = Federation(metrics=True if METRICS_PORT else None)
 clients = [fed.client(f"client_{i}",
                       preferred_role="aggregator" if i == 0 else "trainer")
            for i in range(N_CLIENTS)]
@@ -54,3 +61,19 @@ print("cluster tree:", [(c.cluster_id, c.head, len(c.members))
                         for c in tree.all_clusters()])
 print("broker stats:", fed.broker.sys_stats()["messages_sent"],
       "messages delivered")
+
+if METRICS_PORT:
+    import time
+
+    from repro.api import serve_metrics
+    from repro.obs import write_timeline_json
+
+    srv = serve_metrics(fed.metrics, tracer=fed.tracer,
+                        port=int(METRICS_PORT))
+    print(f"telemetry: {srv.url}/metrics ({fed.metrics.series_count()} "
+          f"series), {srv.url}/timeline.json")
+    timeline_path = os.environ.get("SDFLMQ_TIMELINE_PATH")
+    if timeline_path:
+        print("timeline:", write_timeline_json(fed.tracer, timeline_path))
+    time.sleep(float(os.environ.get("SDFLMQ_METRICS_HOLD_S", "10")))
+    srv.stop()

@@ -20,6 +20,10 @@ Submodules:
                  MQTT broker (paho-mqtt or the bundled stdlib client)
     mini_broker — hermetic in-process MQTT 3.1.1 broker for CI/dev
 
+Observability lives in the sibling package ``repro.obs`` (re-exported
+here): ``Federation(metrics=True)`` + ``serve_metrics(fed.metrics)``
+gives a Prometheus ``/metrics`` endpoint and JSON round timelines.
+
 Heavy imports are lazy (PEP 562) so core modules can import
 ``repro.api.strategies`` without dragging in the full facade.
 """
@@ -43,6 +47,11 @@ _EXPORTS = {
     "AsyncReport": ("repro.api.async_fl", "AsyncReport"),
     "scenarios": ("repro.api.scenarios", None),   # submodule, not attribute
     "async_fl": ("repro.api.async_fl", None),     # submodule
+    "MetricsRegistry": ("repro.obs", "MetricsRegistry"),
+    "Telemetry": ("repro.obs", "Telemetry"),
+    "Tracer": ("repro.obs", "Tracer"),
+    "serve_metrics": ("repro.obs", "serve_metrics"),
+    "obs": ("repro.obs", None),                   # telemetry subpackage
 }
 
 __all__ = sorted(_EXPORTS)

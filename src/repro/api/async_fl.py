@@ -226,6 +226,10 @@ class AsyncFederatedSession(FederatedSession):
         if ctx is None or ctx.terminated:
             return False
         base = ctx.view_params if ctx.view_params is not None else self._initial
+        obs = self.federation.obs
+        if obs is not None:
+            obs.trace("train", session=self.session_id, client=cid,
+                      version=ctx.global_version)
         params, n_samples = self._train_fn(cid, base, ctx.global_version)
         cl.set_model(self.session_id, params, n_samples=n_samples)
         cl.send_local(self.session_id)
@@ -330,6 +334,13 @@ class AsyncFederatedSession(FederatedSession):
                 self.stop_pacing()
         fed.deliver()
         self._fill_report(report)
+        if fed.obs is not None:
+            # trace-derived timeline (same events /metrics sees): replaces
+            # the bare (t, version) breadcrumbs with labeled control-plane
+            # events — mints, partitions, heals, gossip — in virtual-time
+            # order.  The breadcrumb shape is preserved when metrics are
+            # off, keeping the default bit-identical.
+            report.timeline = fed.obs.tracer.timeline()
         return report
 
     def stop_pacing(self) -> None:

@@ -82,7 +82,8 @@ class Federation:
                  clock: Optional[SimClock] = None,
                  coordinator_cfg: Optional[CoordinatorConfig] = None,
                  wire_format: str = "tb",
-                 uplink_codec: Optional[str] = None):
+                 uplink_codec: Optional[str] = None,
+                 metrics=None):
         #: model-plane wire format for clients created via ``client()``:
         #: "tb" = zero-copy TensorBundle (default), "legacy" = msgpack
         #: ExtType (bit-identity fallback).  ``uplink_codec="int8_ef"``
@@ -117,6 +118,22 @@ class Federation:
         self.param_server = ParameterServer(transport)
         self.clients: dict[str, SDFLMQClient] = {}
         self.sessions: dict[str, "FederatedSession"] = {}
+        #: opt-in telemetry (repro.obs).  ``metrics`` accepts ``None``/
+        #: ``False`` (off — the zero-overhead, bit-identical default),
+        #: ``True`` (fresh registry), a ``MetricsRegistry`` to mirror
+        #: into, or a prebuilt ``Telemetry``.  Trace timestamps ride the
+        #: federation's virtual clock.
+        self.obs = None
+        if metrics is not None and metrics is not False:
+            from repro.obs import MetricsRegistry, Telemetry
+            if isinstance(metrics, Telemetry):
+                self.obs = metrics
+            else:
+                reg = metrics if isinstance(metrics, MetricsRegistry) else None
+                self.obs = Telemetry(registry=reg, clock=self.clock)
+            self.obs.bind_federation(self)
+            self.transport.obs = self.obs
+            self.coordinator.obs = self.obs
 
     def deliver(self) -> None:
         """Drain every in-flight delivery (no-op while the clock is held —
@@ -139,14 +156,26 @@ class Federation:
     def broker(self) -> Transport:
         return self.transport
 
+    @property
+    def metrics(self):
+        """The federation's ``MetricsRegistry`` (None when metrics are off)."""
+        return self.obs.registry if self.obs is not None else None
+
+    @property
+    def tracer(self):
+        """The federation's ``Tracer`` (None when metrics are off)."""
+        return self.obs.tracer if self.obs is not None else None
+
     def client(self, client_id: str, preferred_role: str = "trainer",
                stats: Optional[ClientStats] = None) -> SDFLMQClient:
         """Create (or return) a client endpoint attached to this federation."""
         if client_id not in self.clients:
-            self.clients[client_id] = SDFLMQClient(
+            cl = SDFLMQClient(
                 client_id, self.transport, preferred_role=preferred_role,
                 stats=stats, wire_format=self.wire_format,
                 uplink_codec=self.uplink_codec)
+            cl.obs = self.obs
+            self.clients[client_id] = cl
         return self.clients[client_id]
 
     def create_session(self, session_id: str, model_name: str, rounds: int,
@@ -307,7 +336,11 @@ class FederatedSession:
         base = self.global_params()
         if base is None:
             base = self._initial
+        obs = self.federation.obs
         for cid, cl in sorted(self.participants.items()):
+            if obs is not None:
+                obs.trace("train", session=self.session_id, client=cid,
+                          round=rnd)
             params, n_samples = train_fn(cid, base, rnd)
             cl.set_model(self.session_id, params, n_samples=n_samples)
         for cid, cl in sorted(self.participants.items()):

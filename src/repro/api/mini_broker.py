@@ -48,7 +48,8 @@ import threading
 from collections import defaultdict
 from typing import Optional
 
-from repro.core.broker import TopicTrie, topic_matches
+from repro.core.broker import (Message, RetainedSeq, TopicTrie, retain_message,
+                               topic_matches)
 
 # MQTT 3.1.1 control-packet types (spec §2.2.1)
 CONNECT, CONNACK, PUBLISH, PUBACK = 1, 2, 3, 4
@@ -195,7 +196,7 @@ class MiniBroker:
         self._server: Optional[asyncio.AbstractServer] = None
         self._thread: Optional[threading.Thread] = None
         self._conns: dict[str, _Conn] = {}
-        self._retained: dict[str, tuple[bytes, int]] = {}
+        self._retained: dict[str, RetainedSeq] = {}
         self._trie = TopicTrie()
         self._mids = 0
         # $SYS-style counters (same keys as SimBroker's SysStats snapshot)
@@ -386,10 +387,15 @@ class MiniBroker:
         # the filters of THIS packet only [MQTT-3.3.1-6]: earlier
         # subscriptions already received their replay
         for filt in fresh:
-            for topic, (payload, rqos) in list(self._retained.items()):
+            for topic, seq in list(self._retained.items()):
                 if topic_matches(filt, topic):
-                    self._send_to(conn, topic, payload,
-                                  min(rqos, conn.subs[filt]), retain=True)
+                    # full frame sequence, in part order (multi-part
+                    # fleet-control calls retain every frame, not just
+                    # the last one)
+                    for m in seq.messages():
+                        self._send_to(conn, topic, m.payload,
+                                      min(m.qos, conn.subs[filt]),
+                                      retain=True)
 
     def _on_unsubscribe(self, conn: _Conn, cur: _Cursor) -> None:
         mid = cur.u16()
@@ -404,7 +410,8 @@ class MiniBroker:
                retain: bool) -> None:
         if retain:
             if payload:
-                self._retained[topic] = (payload, qos)
+                retain_message(self._retained,
+                               Message(topic, payload, qos, retain=True))
             else:
                 self._retained.pop(topic, None)     # empty payload clears
         matched = False
@@ -463,6 +470,9 @@ class MiniBroker:
             "per_topic_class": dict(self.per_topic_class),
             "connected_clients": len(self._conns),
             "retained_messages": len(self._retained),
+            "trie_cache_hits": self._trie.cache_hits,
+            "trie_cache_misses": self._trie.cache_misses,
+            "subscriptions": self._trie.size,
         }
 
     def retained_topics(self) -> list[str]:

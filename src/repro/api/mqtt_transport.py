@@ -511,6 +511,13 @@ class PahoTransport:
             "bytes_in": self.bytes_in,
             "barrier_rounds": self.barrier_rounds,
             "barrier_supported": self._barrier_ok,
+            # canonical core schema (repro.obs.SYS_CORE), from this
+            # transport's perspective: sent = published to the broker,
+            # received = delivered by the broker to pooled subscribers
+            "messages_sent": self.publishes,
+            "messages_received": self.received,
+            "bytes_sent": self.bytes_out,
+            "bytes_received": self.bytes_in,
         }
 
     def close(self) -> None:

@@ -250,4 +250,11 @@ def play(session, train_fn: Callable, events: Sequence[ScenarioEvent] = (),
         cl.models.sessions[session.session_id].stale_dropped
         for cl in session.participants.values()
         if session.session_id in cl.models.sessions)
+    if fed.obs is not None:
+        # trace-derived timeline (the same events /metrics counts): labeled
+        # control-plane events — round starts/completions, partitions,
+        # heals, deadline cuts, mints — in virtual-time order.  The bare
+        # "round N" breadcrumbs are preserved when metrics are off, keeping
+        # the default bit-identical.
+        report.timeline = fed.obs.tracer.timeline()
     return report

@@ -373,6 +373,9 @@ class LatencyTransport:
         self._last_arrival: dict[str, float] = {}       # per-sender FIFO
         self.partition_held = 0
         self.partition_dropped = 0
+        # optional telemetry facade (repro.obs.Telemetry); set by
+        # Federation(metrics=...).  None = zero-overhead default.
+        self.obs = None
 
     @property
     def name(self) -> str:
@@ -402,12 +405,17 @@ class LatencyTransport:
         connectivity.  QoS>=1 and retained traffic across the cut is held;
         QoS 0 traffic is lost."""
         self._groups = [set(g) for g in groups]
+        if self.obs is not None:
+            self.obs.trace("partition", groups=len(self._groups),
+                           clients=sum(len(g) for g in self._groups))
 
     def heal(self) -> None:
         """Restore connectivity and release held messages (delivered at the
         heal time, in the order they were originally routed)."""
         self._groups = None
         held, self._held_msgs = self._held_msgs, []
+        if self.obs is not None:
+            self.obs.trace("heal", released=len(held))
         for receiver, msg in held:
             self.clock.schedule(
                 self.clock.now,
@@ -477,6 +485,9 @@ class LatencyTransport:
         key = sender or "<anon>"
         arrival = max(self.clock.now + lat, self._last_arrival.get(key, 0.0))
         self._last_arrival[key] = arrival
+        if self.obs is not None:
+            self.obs.trace("publish", topic=topic, sender=key, qos=qos,
+                           bytes=len(payload), arrival=round(arrival, 6))
         self.clock.schedule(
             arrival,
             lambda: self._deliver(topic, payload, qos, retain, sender))
@@ -485,6 +496,9 @@ class LatencyTransport:
         return 0
 
     def _deliver(self, topic, payload, qos, retain, sender) -> None:
+        if self.obs is not None:
+            self.obs.trace("deliver", topic=topic, sender=sender or "<anon>",
+                           bytes=len(payload))
         prev, self._current_sender = self._current_sender, sender or None
         try:
             self.inner.publish(topic, payload, qos=qos, retain=retain,

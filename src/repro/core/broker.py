@@ -25,6 +25,8 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+import msgpack
+
 
 @dataclass
 class Message:
@@ -85,13 +87,16 @@ class TopicTrie:
     with ``$``.
     """
 
-    __slots__ = ("_root", "_seq", "_cache", "size")
+    __slots__ = ("_root", "_seq", "_cache", "size",
+                 "cache_hits", "cache_misses")
 
     def __init__(self):
         self._root = _TrieNode()
         self._seq = itertools.count()
         self._cache: dict[str, tuple] = {}
         self.size = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def insert(self, topic_filter: str, value) -> None:
         node = self._root
@@ -138,7 +143,9 @@ class TopicTrie:
         """Values whose filter matches ``topic``, ordered by insertion."""
         hit = self._cache.get(topic)
         if hit is not None:
+            self.cache_hits += 1
             return hit
+        self.cache_misses += 1
         parts = topic.split("/")
         found: dict = {}          # value -> min seq
         sys_topic = parts[0].startswith("$")
@@ -176,6 +183,74 @@ class TopicTrie:
 
     def invalidate(self) -> None:
         self._cache.clear()
+
+
+def frame_part_info(payload) -> Optional[tuple]:
+    """Best-effort sniff of an MQTTFC frame header: returns ``(sender,
+    call_id, part_idx, n_parts)`` when ``payload`` looks like a fleet-
+    control frame, ``None`` for opaque payloads.  Brokers use this to keep
+    the FULL frame sequence of a retained multi-part message (one retained
+    slot per topic holds every part of the latest call) instead of the
+    classic single-slot behavior that would replay only the last frame."""
+    try:
+        mv = memoryview(payload)
+        if len(mv) < 5:
+            return None
+        hlen = int.from_bytes(mv[:4], "big")
+        if hlen <= 0 or hlen > 512 or 4 + hlen > len(mv):
+            return None
+        header = msgpack.unpackb(bytes(mv[4:4 + hlen]))
+        if not isinstance(header, (list, tuple)) or len(header) < 6:
+            return None
+        sender, call_id, idx, n_parts = header[0], header[1], header[2], header[3]
+        if not isinstance(sender, str):
+            return None
+        if not all(isinstance(x, int) and not isinstance(x, bool)
+                   for x in (call_id, idx, n_parts)):
+            return None
+        if n_parts < 1 or not 0 <= idx < n_parts:
+            return None
+        return sender, call_id, idx, n_parts
+    except Exception:
+        return None
+
+
+class RetainedSeq:
+    """The retained state of one topic: either a single opaque message or
+    the (possibly still accumulating) frame sequence of one multi-part
+    fleet-control call, keyed by ``(sender, call_id)``."""
+
+    __slots__ = ("key", "n_parts", "parts")
+
+    def __init__(self, key: Optional[tuple], n_parts: int):
+        self.key = key
+        self.n_parts = n_parts
+        self.parts: dict[int, Message] = {}
+
+    def messages(self) -> list[Message]:
+        return [self.parts[i] for i in sorted(self.parts)]
+
+
+def retain_message(store: dict, msg: Message,
+                   info: Optional[tuple] = None) -> None:
+    """Shared retained-store update (SimBroker + MiniBroker semantics):
+    opaque or single-part payloads replace the slot (last value wins); a
+    part of a NEW multi-part call replaces the slot; further parts of the
+    SAME call accumulate into it."""
+    if info is None:
+        info = frame_part_info(msg.payload)
+    if info is None or info[3] <= 1:
+        seq = RetainedSeq(None, 1)
+        seq.parts[0] = msg
+        store[msg.topic] = seq
+        return
+    sender, call_id, idx, n_parts = info
+    key = (sender, call_id)
+    cur = store.get(msg.topic)
+    if cur is None or cur.key != key:
+        cur = RetainedSeq(key, n_parts)
+        store[msg.topic] = cur
+    cur.parts[idx] = msg
 
 
 @dataclass
@@ -259,7 +334,7 @@ class SimBroker:
         # isolated between brokers and deterministic across runs
         self._ids = itertools.count(1)
         self._clients: dict[str, _ClientSession] = {}
-        self._retained: dict[str, Message] = {}
+        self._retained: dict[str, RetainedSeq] = {}
         self._queue: deque = deque()
         self._pumping = False
         self._bridges: list[_BridgeLink] = []
@@ -297,10 +372,11 @@ class SimBroker:
         sess = self._clients[client_id]
         sess.subscriptions[topic_filter] = qos
         self._trie.insert(topic_filter, (client_id, topic_filter))
-        # retained delivery
-        for topic, msg in list(self._retained.items()):
+        # retained delivery: the full frame sequence, in part order
+        for topic, seq in list(self._retained.items()):
             if topic_matches(topic_filter, topic):
-                self._deliver(sess, msg)
+                for msg in seq.messages():
+                    self._deliver(sess, msg)
 
     def unsubscribe(self, client_id: str, topic_filter: str) -> None:
         sess = self._clients.get(client_id)
@@ -343,7 +419,7 @@ class SimBroker:
     def _route(self, msg: Message) -> None:
         if msg.retain:
             if msg.payload:
-                self._retained[msg.topic] = msg
+                retain_message(self._retained, msg)
             else:
                 self._retained.pop(msg.topic, None)
         matched = False
@@ -408,7 +484,12 @@ class SimBroker:
 
     # ---- introspection ---------------------------------------------------
     def sys_stats(self) -> dict:
-        return self.stats.snapshot()
+        out = self.stats.snapshot()
+        out["trie_cache_hits"] = self._trie.cache_hits
+        out["trie_cache_misses"] = self._trie.cache_misses
+        out["subscriptions"] = self._trie.size
+        out["retained_messages"] = len(self._retained)
+        return out
 
     def retained_topics(self) -> list[str]:
         return sorted(self._retained)

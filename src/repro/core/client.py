@@ -386,6 +386,9 @@ class SDFLMQClient:
         self.models = ModelController()
         self.on_global_update: Optional[Callable] = None
         self.on_round_start: Optional[Callable] = None
+        # optional telemetry facade (repro.obs.Telemetry); set by
+        # Federation(metrics=...).  None = zero-overhead default.
+        self.obs = None
         self.fc.bind(T.client_ctrl(client_id), self._on_ctrl)
 
     # ------------------------------------------------------------------
@@ -452,6 +455,10 @@ class SDFLMQClient:
         # round barrier index
         stamp = ctx.global_version if ctx.async_cfg is not None \
             else ctx.round_idx
+        if self.obs is not None:
+            self.obs.trace("contribute", session=session_id,
+                           client=self.client_id, cluster=asg.train_cluster,
+                           stamp=stamp)
         if self.uplink_codec == "int8_ef":
             q, scales = self._quantize_uplink(ctx)
             if self.fc.wire_format == "tb":   # legacy msgpack takes dicts
@@ -672,6 +679,8 @@ class SDFLMQClient:
             buf.note_stamp(int(body.get("stamp", stamp)))
         else:
             staleness = max(0, ctx.global_version - stamp)
+            if self.obs is not None:
+                self.obs.observe_staleness(staleness)
             if bound is not None and staleness > bound:
                 buf.rejected_stale += 1
                 ctx.async_rejected += 1
@@ -746,6 +755,10 @@ class SDFLMQClient:
                 payload["stamp"] = buf.min_stamp if buf.min_stamp is not None \
                     else ctx.global_version
                 self._mint_site_model(ctx, strat, a)
+            if self.obs is not None:
+                self.obs.trace("flush", session=session_id,
+                               client=self.client_id, cluster=cluster_id,
+                               parent=duty.parent, received=a.received)
             self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
         else:
             glob, new_state = self._finalize_root(ctx, strat, a)
@@ -778,6 +791,10 @@ class SDFLMQClient:
                 # server-optimizer state rides the retained global publish,
                 # so whichever client roots the next round resumes it
                 msg["server_state"] = new_state
+            if self.obs is not None:
+                self.obs.trace("mint", session=session_id,
+                               client=self.client_id, cluster=cluster_id,
+                               version=version)
             self.fc.call(T.global_model(session_id), msg, retain=True)
         if buf is not None:
             buf.flushes += 1
@@ -849,6 +866,11 @@ class SDFLMQClient:
                   for k, v in ctx.view_params.items()}
         if self.fc.wire_format == "tb":
             params = TensorBundle.from_params(params)
+        if self.obs is not None:
+            self.obs.trace("gossip", session=session_id,
+                           client=self.client_id,
+                           version=ctx.global_version,
+                           site_seq=ctx.site_seq)
         self.fc.call(T.gossip(session_id, self.client_id),
                      {"params": params, "version": ctx.global_version,
                       "site_seq": ctx.site_seq, "sender": self.client_id})

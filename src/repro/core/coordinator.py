@@ -8,6 +8,7 @@ assignments, cluster topology), exactly as in the paper.  Role
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -51,6 +52,10 @@ class Coordinator:
         self.arrangement_messages = 0
         self.deadline_cuts = 0              # rounds ended by the deadline
         self._pending_cut: dict[str, int] = {}   # sid -> round being cut
+        # optional telemetry facade (repro.obs.Telemetry); set by
+        # Federation(metrics=...).  None = zero-overhead default.
+        self.obs = None
+        self._round_wall: dict[str, float] = {}  # sid -> perf_counter stamp
         # RFC bindings
         self.fc.bind(T.coord("create_session"), self._create_session)
         self.fc.bind(T.coord("join_session"), self._join_session)
@@ -186,11 +191,15 @@ class Coordinator:
             s.round_idx = ver
             s.history.append({"round": ver, "participants":
                               sorted(s.contributors)})
+            if self.obs is not None:
+                self.obs.trace("round_complete", session=sid, version=ver)
             if self.on_round_complete:
                 self.on_round_complete(sid, ver)
         if 0 < s.fl_rounds <= ver:
             s.state = SessionState.TERMINATED
             self.fc.unbind(T.global_model(sid))
+            if self.obs is not None:
+                self.obs.trace("session_end", session=sid, rounds=ver)
             self._broadcast_status(sid, {"event": "session_terminated",
                                          "rounds": ver})
 
@@ -225,6 +234,9 @@ class Coordinator:
             self.fc.subscribe_raw(T.global_model(session_id),
                                   self._on_async_global)
             return
+        if self.obs is not None:
+            self.obs.trace("round_start", session=session_id,
+                           round=s.round_idx)
         self._broadcast_status(session_id, {"event": "round_start",
                                             "round": s.round_idx})
         self._arm_round(session_id)
@@ -285,15 +297,31 @@ class Coordinator:
         s = self.sessions[session_id]
         if self._pending_cut.pop(session_id, None) is not None:
             self.fc.unbind(T.global_model(session_id))
+        if self.obs is not None:
+            virtual_s = (self.clock.now - s.round_started_at
+                         if self.clock is not None else None)
+            wall0 = self._round_wall.pop(session_id, None)
+            wall_s = (time.perf_counter() - wall0
+                      if wall0 is not None else None)
+            self.obs.observe_round(session_id, virtual_s, wall_s)
+            self.obs.trace("round_complete", session=session_id,
+                           round=s.round_idx,
+                           contributors=len(s.contributors))
         s.next_round()
         if self.on_round_complete:
             self.on_round_complete(session_id, s.round_idx)
         if s.state == SessionState.TERMINATED:
+            if self.obs is not None:
+                self.obs.trace("session_end", session=session_id,
+                               rounds=s.round_idx)
             self._broadcast_status(session_id, {"event": "session_terminated",
                                                 "rounds": s.round_idx})
             return
         # role optimization + rearrangement for the new round
         self._arrange(session_id, rearrange=True)
+        if self.obs is not None:
+            self.obs.trace("round_start", session=session_id,
+                           round=s.round_idx)
         self._broadcast_status(session_id, {"event": "round_start",
                                             "round": s.round_idx})
         self._arm_round(session_id)
@@ -305,6 +333,8 @@ class Coordinator:
         started yet is never cut with zero contributions."""
         if self.clock is not None:
             self.sessions[session_id].round_started_at = self.clock.now
+        if self.obs is not None:
+            self._round_wall[session_id] = time.perf_counter()
 
     def _arm_deadline(self, session_id: str) -> None:
         """First readiness of the round observed: every other participant
@@ -328,6 +358,9 @@ class Coordinator:
                 or s.round_idx != round_idx or s.all_ready:
             return
         self.deadline_cuts += 1
+        if self.obs is not None:
+            self.obs.trace("deadline_cut", session=session_id,
+                           round=round_idx)
         if session_id not in self._pending_cut:
             # observe this session's global publishes only while a cut is
             # pending — the cut round closes the moment its (partial)

@@ -214,12 +214,21 @@ class MQTTFC:
         self._buffers: "OrderedDict[tuple, dict[int, Any]]" = OrderedDict()
         will = Message(will_topic, will_payload, qos=1) if will_topic else None
         self.session = broker.connect(client_id, self._on_message, will=will)
+        # reusable encode buffer for tensor-bearing bodies: steady-state
+        # rounds re-encode the same model size, so the second call onward
+        # allocates nothing for the body
+        self._arena = wire.FrameArena()
         # wire-stats (paper evaluates load): logical calls vs wire messages
         self.calls_sent = 0
         self.parts_sent = 0
         self.bytes_sent = 0
         self.raw_bytes_sent = 0
         self.reassembly_evictions = 0
+        self.calls_received = 0
+        self.parts_received = 0
+        self.bytes_received = 0
+        self.compress_attempts = 0
+        self.compress_wins = 0
 
     # ---- binding ---------------------------------------------------------
     def bind(self, topic: str, fn: Callable, qos: int = 1) -> None:
@@ -255,8 +264,9 @@ class MQTTFC:
         the recompression attempt is skipped and the frame flagged."""
         obj = {"a": list(args), "k": kwargs, "s": self.client_id}
         flags = 0
+        arena_view = None
         if self.wire_format == "tb" and wire.is_wire_payload(obj):
-            body = wire.encode_body(obj)
+            body = arena_view = wire.encode_body(obj, arena=self._arena)
             flags |= F_TENSORBUNDLE
         else:
             body = encode(obj)
@@ -264,14 +274,26 @@ class MQTTFC:
         if quantized:
             flags |= F_QUANTIZED
         elif len(body) >= self.compress_threshold and _worth_compressing(body):
+            self.compress_attempts += 1
             comp = compress(body, self.codec)
             if len(comp) < len(body):
                 body = comp
                 flags |= F_COMPRESSED
+                self.compress_wins += 1
+                # the compressed copy supersedes the arena body
+                if arena_view is not None:
+                    self._arena.release(arena_view)
+                    arena_view = None
         call_id = next(self._call_ids)
         total = len(body)
         n_parts = max(1, -(-total // self.max_batch_bytes))
         self.calls_sent += 1
+        # Each frame copies its chunk out of the body before publishing, so
+        # handlers re-entering call() from a synchronous broker delivery
+        # only ever see completed frames.  The arena checkout stays open
+        # until the last chunk is copied: a re-entrant take() falls back to
+        # a fresh buffer, and the ownership-checked release below ignores
+        # the nested caller releasing that fallback.
         mv = memoryview(body)
         for i in range(n_parts):
             off = i * self.max_batch_bytes
@@ -286,6 +308,8 @@ class MQTTFC:
             self.bytes_sent += len(frame)
             self.broker.publish(topic, frame, qos=qos, retain=retain,
                                 sender=self.client_id)
+        if arena_view is not None:
+            self._arena.release(arena_view)
 
     # ---- reassembly ------------------------------------------------------
     def _assembly_for(self, key: tuple, call_id: int, total: int,
@@ -325,6 +349,15 @@ class MQTTFC:
             "parts_sent": self.parts_sent,
             "bytes_sent": self.bytes_sent,
             "raw_bytes_sent": self.raw_bytes_sent,
+            "calls_received": self.calls_received,
+            "parts_received": self.parts_received,
+            "bytes_received": self.bytes_received,
+            "compress_attempts": self.compress_attempts,
+            "compress_wins": self.compress_wins,
+            "arena_reuse_hits": self._arena.reuse_hits,
+            "arena_grows": self._arena.grows,
+            "arena_busy_allocs": self._arena.busy_allocs,
+            "arena_capacity_bytes": len(self._arena),
             "reassembly_pending": self.reassembly_pending(),
             "reassembly_evictions": self.reassembly_evictions,
             "codec": self.codec,
@@ -334,6 +367,8 @@ class MQTTFC:
     # ---- dispatch --------------------------------------------------------
     def _on_message(self, msg: Message) -> None:
         payload = memoryview(msg.payload)
+        self.parts_received += 1
+        self.bytes_received += len(payload)
         hlen = int.from_bytes(payload[:4], "big")
         header = msgpack.unpackb(payload[4:4 + hlen])
         if len(header) >= 8:
@@ -356,6 +391,7 @@ class MQTTFC:
             del self._buffers[key][call_id]
             if not self._buffers[key]:
                 del self._buffers[key]
+        self.calls_received += 1
         if flags & F_COMPRESSED:
             body = decompress(body, codec)
         fn = self._dispatch(msg.topic)

@@ -162,10 +162,61 @@ class TensorStack:
 # Body codec
 # ---------------------------------------------------------------------------
 
-def encode_body(obj: Any) -> bytearray:
+class FrameArena:
+    """Grow-only reusable encode buffer.
+
+    ``take(n)`` hands out a writable ``memoryview`` over a per-instance
+    bytearray, growing it only when ``n`` exceeds the current capacity —
+    so steady-state encodes (the common FL case: same model, every round)
+    stop allocating entirely.  The arena is single-checkout: while a view
+    is outstanding (``release()`` not yet called), a nested ``take``
+    falls back to a fresh allocation instead of corrupting the in-flight
+    frame (re-entrant encodes happen when a broker delivers synchronously
+    and the handler publishes through the same endpoint).  Pass that view
+    back to ``release(view)`` to make the release ownership-checked: a
+    re-entrant caller releasing its fallback buffer is then a no-op, so
+    the outer checkout stays protected.
+    """
+
+    __slots__ = ("_buf", "_in_use", "reuse_hits", "grows", "busy_allocs")
+
+    def __init__(self, initial: int = 0) -> None:
+        self._buf = bytearray(initial)
+        self._in_use = False
+        self.reuse_hits = 0      # takes served from the existing buffer
+        self.grows = 0           # takes that had to reallocate larger
+        self.busy_allocs = 0     # re-entrant takes served off-arena
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def take(self, n: int):
+        if self._in_use:
+            self.busy_allocs += 1
+            return memoryview(bytearray(n))
+        if len(self._buf) < n:
+            self._buf = bytearray(n)
+            self.grows += 1
+        else:
+            self.reuse_hits += 1
+        self._in_use = True
+        return memoryview(self._buf)[:n]
+
+    def release(self, view=None) -> None:
+        if view is None or getattr(view, "obj", None) is self._buf:
+            self._in_use = False
+
+
+def encode_body(obj: Any, arena: "FrameArena | None" = None) -> bytearray:
     """Encode a call payload into ONE preallocated buffer.  Tensors
     (ndarray / TensorBundle / TensorStack) are copied exactly once, into
-    the trailing data region; everything else is msgpack."""
+    the trailing data region; everything else is msgpack.
+
+    With ``arena`` the buffer is checked out of a reusable
+    :class:`FrameArena` (returned as a writable memoryview; the caller
+    must ``arena.release()`` once the frame bytes have been copied out)
+    instead of freshly allocated.  Every byte of the returned buffer is
+    written either way, so arena reuse cannot leak stale data."""
     table: list = []
     segments: list = []          # contiguous bytes-like per table entry
     data_len = 0
@@ -205,7 +256,8 @@ def encode_body(obj: Any) -> bytearray:
     meta = msgpack.packb(obj, default=_hook, use_bin_type=True)
     tbl = msgpack.packb(table, use_bin_type=True)
     head_len = 4 + len(tbl) + 4 + len(meta)
-    out = bytearray(head_len + data_len)
+    total = head_len + data_len
+    out = arena.take(total) if arena is not None else bytearray(total)
     out[0:4] = len(tbl).to_bytes(4, "big")
     out[4:4 + len(tbl)] = tbl
     mo = 4 + len(tbl)

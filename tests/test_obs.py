@@ -1,0 +1,500 @@
+"""Telemetry subsystem (``repro.obs``) tests: the metrics registry and its
+Prometheus text exposition, the bounded-ring round tracer, the stdlib HTTP
+exporter, the reusable encode arena, and — the acceptance criteria — a fully
+instrumented federation: ``Federation(metrics=None)`` stays bit-identical to
+the uninstrumented path, while ``metrics=True`` exposes 20+ series spanning
+broker/wire/accumulator/async/coordinator and renders partition → heal →
+reconvergence timelines in virtual-time order."""
+import doctest
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.api import Federation, scenarios
+from repro.core import wire
+from repro.core.broker import SimBroker
+from repro.core.mqttfc import MQTTFC
+from repro.obs import (MetricsRegistry, Telemetry, Tracer, render_prom,
+                       serve_metrics, timeline_json, write_timeline_json)
+from repro.obs.registry import DEFAULT_BUCKETS
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_inc_and_value(self):
+        reg = MetricsRegistry()
+        c = reg.counter("sdflmq_x_total", "x", labels=("kind",))
+        c.labels(kind="a").inc()
+        c.labels(kind="a").inc(4)
+        c.labels(kind="b").inc(2)
+        assert c.labels(kind="a").value == 5.0
+        assert c.labels(kind="b").value == 2.0
+
+    def test_counter_rejects_negative(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("sdflmq_neg_total").inc(-1)
+
+    def test_gauge_set_inc_dec(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("sdflmq_depth")
+        g.set(7)
+        g.inc(3)
+        g.dec(1)
+        assert g.value == 9.0
+
+    def test_histogram_buckets_are_cumulative_in_render(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("sdflmq_lat", buckets=(0.1, 1.0, 5.0))
+        for v in (0.05, 0.5, 0.5, 3.0, 99.0):
+            h.observe(v)
+        text = reg.render_prom()
+        assert 'sdflmq_lat_bucket{le="0.1"} 1' in text
+        assert 'sdflmq_lat_bucket{le="1.0"} 3' in text
+        assert 'sdflmq_lat_bucket{le="5.0"} 4' in text
+        assert 'sdflmq_lat_bucket{le="+Inf"} 5' in text
+        assert "sdflmq_lat_count 5" in text
+        assert h.value["count"] == 5
+
+    def test_histogram_value_on_bucket_boundary_counts_le(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("sdflmq_edge", buckets=(1.0, 2.0))
+        h.observe(1.0)                      # le="1.0" is inclusive
+        assert 'sdflmq_edge_bucket{le="1.0"} 1' in reg.render_prom()
+
+    def test_same_name_returns_same_family(self):
+        reg = MetricsRegistry()
+        a = reg.counter("sdflmq_same_total", labels=("k",))
+        b = reg.counter("sdflmq_same_total", labels=("k",))
+        assert a is b
+
+    def test_kind_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("sdflmq_clash")
+        with pytest.raises(ValueError, match="already registered as counter"):
+            reg.gauge("sdflmq_clash")
+
+    def test_label_mismatch_raises(self):
+        reg = MetricsRegistry()
+        c = reg.counter("sdflmq_lbl_total", labels=("a",))
+        with pytest.raises(ValueError):
+            reg.counter("sdflmq_lbl_total", labels=("b",))
+        with pytest.raises(ValueError):
+            c.labels(wrong="x")
+
+    def test_labeled_family_requires_labels_call(self):
+        reg = MetricsRegistry()
+        c = reg.counter("sdflmq_need_total", labels=("k",))
+        with pytest.raises(ValueError, match="call .labels"):
+            c.inc()
+
+    def test_label_values_are_escaped(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("sdflmq_esc", labels=("path",))
+        g.labels(path='a"b\\c\nd').set(1)
+        text = reg.render_prom()
+        assert 'path="a\\"b\\\\c\\nd"' in text
+
+    def test_collector_runs_on_every_exposition(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("sdflmq_mirrored")
+        source = {"n": 0}
+        reg.register_collector(lambda: g.set(source["n"]))
+        source["n"] = 41
+        assert "sdflmq_mirrored 41" in reg.render_prom()
+        source["n"] = 42
+        assert reg.snapshot()["sdflmq_mirrored"]["samples"][""] == 42.0
+
+    def test_series_count_counts_histogram_lines(self):
+        reg = MetricsRegistry()
+        reg.counter("sdflmq_a_total").inc()
+        reg.histogram("sdflmq_h", buckets=(1.0, 2.0)).observe(1.5)
+        # 1 counter line + (2 buckets + +Inf + _sum + _count)
+        assert reg.series_count() == 1 + 5
+        rendered = [l for l in reg.render_prom().splitlines()
+                    if l and not l.startswith("#")]
+        assert len(rendered) == reg.series_count()
+
+    def test_snapshot_is_json_safe(self):
+        reg = MetricsRegistry()
+        reg.counter("sdflmq_j_total", labels=("k",)).labels(k="x").inc()
+        reg.histogram("sdflmq_jh").observe(0.2)
+        json.dumps(reg.snapshot())          # must not raise
+
+    def test_default_buckets_are_sorted(self):
+        assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+
+    def test_module_doctests_pass(self):
+        """Satellite: the documented MetricsRegistry tour is executable."""
+        import repro.obs.registry as mod
+        result = doctest.testmod(mod)
+        assert result.attempted > 0
+        assert result.failed == 0
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+
+class TestTracer:
+    def test_virtual_clock_timestamps(self):
+        clock = _FakeClock()
+        tr = Tracer(clock=clock)
+        tr.emit("round_start", session="s", round=0)
+        clock.now = 2.5
+        tr.emit("round_complete", session="s", round=0)
+        ts = [e["t"] for e in tr.events()]
+        assert ts == [0.0, 2.5]
+
+    def test_ring_is_bounded_and_counts_drops(self):
+        tr = Tracer(maxlen=8)
+        for i in range(20):
+            tr.emit("tick", i=i)
+        assert len(tr.events()) == 8
+        assert tr.emitted == 20
+        assert tr.dropped == 12
+        assert [e["i"] for e in tr.events()] == list(range(12, 20))
+
+    def test_kinds_and_filtered_events(self):
+        tr = Tracer(clock=_FakeClock())
+        tr.emit("publish", topic="t")
+        tr.emit("publish", topic="u")
+        tr.emit("mint", version=1)
+        assert tr.kinds() == {"publish": 2, "mint": 1}
+        assert [e["topic"] for e in tr.events("publish")] == ["t", "u"]
+
+    def test_timeline_excludes_noisy_kinds_by_default(self):
+        clock = _FakeClock()
+        tr = Tracer(clock=clock)
+        tr.emit("publish", topic="t")
+        clock.now = 1.0
+        tr.emit("partition", groups=2)
+        clock.now = 3.0
+        tr.emit("heal", released=5)
+        tl = tr.timeline()
+        assert tl == [(1.0, "partition groups=2"), (3.0, "heal released=5")]
+        only_pub = tr.timeline(include=("publish",))
+        assert only_pub == [(0.0, "publish topic=t")]
+
+    def test_timeline_is_sorted_by_timestamp(self):
+        clock = _FakeClock()
+        tr = Tracer(clock=clock)
+        clock.now = 5.0
+        tr.emit("late")
+        clock.now = 1.0                     # out-of-order emission
+        tr.emit("early")
+        assert [lbl for _, lbl in tr.timeline()] == ["early", "late"]
+
+    def test_to_json_shape(self):
+        tr = Tracer(clock=_FakeClock(), maxlen=4)
+        tr.emit("mint", version=1)
+        doc = json.loads(tr.to_json())
+        assert doc["clock"] == "virtual"
+        assert doc["emitted"] == 1 and doc["dropped"] == 0
+        assert doc["events"][0]["kind"] == "mint"
+        assert json.loads(Tracer().to_json())["clock"] == "wall"
+
+    def test_clear(self):
+        tr = Tracer()
+        tr.emit("x")
+        tr.clear()
+        assert tr.events() == [] and tr.emitted == 1
+
+
+# ---------------------------------------------------------------------------
+# Exporters: /metrics endpoint + timeline files
+# ---------------------------------------------------------------------------
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.status, dict(resp.headers), resp.read().decode("utf-8")
+
+
+class TestExporters:
+    def test_http_metrics_endpoint(self):
+        reg = MetricsRegistry()
+        reg.counter("sdflmq_http_total").inc(3)
+        tr = Tracer(clock=_FakeClock())
+        tr.emit("mint", version=2)
+        srv = serve_metrics(reg, tracer=tr)
+        try:
+            status, headers, body = _get(srv.url + "/metrics")
+            assert status == 200
+            assert headers["Content-Type"].startswith("text/plain")
+            assert "sdflmq_http_total 3" in body
+            assert body == render_prom(reg)
+            status, _, body = _get(srv.url + "/timeline.json")
+            assert status == 200
+            assert json.loads(body)["events"][0]["version"] == 2
+            status, _, body = _get(srv.url + "/")
+            assert status == 200 and "/metrics" in body
+        finally:
+            srv.stop()
+
+    def test_http_404s(self):
+        srv = serve_metrics(MetricsRegistry())    # no tracer attached
+        try:
+            for path in ("/timeline.json", "/nope"):
+                with pytest.raises(urllib.error.HTTPError) as ei:
+                    _get(srv.url + path)
+                assert ei.value.code == 404
+        finally:
+            srv.stop()
+
+    def test_write_timeline_json(self, tmp_path):
+        tr = Tracer(clock=_FakeClock())
+        tr.emit("round_start", session="s", round=0)
+        path = write_timeline_json(tr, str(tmp_path / "tl.json"))
+        doc = json.loads(open(path).read())
+        assert doc["events"][0]["kind"] == "round_start"
+        assert timeline_json(tr) == tr.to_json(indent=1)
+
+
+# ---------------------------------------------------------------------------
+# FrameArena (satellite: reusable encode buffer)
+# ---------------------------------------------------------------------------
+
+def _call_payload(n=12):
+    return {"a": [np.arange(n, dtype=np.float32)], "k": {}, "s": "me"}
+
+
+class TestFrameArena:
+    def test_take_grow_release_reuse(self):
+        a = wire.FrameArena()
+        mv = a.take(64)
+        assert len(mv) == 64 and a.grows == 1
+        a.release()
+        a.take(32)                          # fits: reuse, no realloc
+        assert a.reuse_hits == 1 and a.grows == 1
+        a.release()
+        a.take(128)                         # exceeds capacity: grow
+        assert a.grows == 2 and len(a) == 128
+
+    def test_busy_checkout_hands_out_fresh_buffer(self):
+        a = wire.FrameArena()
+        mv = a.take(16)
+        mv[:] = b"\x00" * 16
+        mv2 = a.take(16)                    # still checked out: fresh alloc
+        assert a.busy_allocs == 1
+        mv2[:] = b"\x01" * 16
+        assert bytes(mv) == b"\x00" * 16    # the arena buffer is untouched
+
+    def test_encode_body_with_arena_matches_plain_encode(self):
+        obj = _call_payload()
+        plain = bytes(wire.encode_body(obj))
+        a = wire.FrameArena()
+        assert bytes(wire.encode_body(obj, arena=a)) == plain
+        a.release()
+        # steady state: the reused buffer re-encodes without stale leakage
+        assert bytes(wire.encode_body(obj, arena=a)) == plain
+        assert a.reuse_hits == 1
+        a.release()
+        np.testing.assert_array_equal(
+            wire.decode_body(wire.encode_body(obj, arena=a))["a"][0],
+            obj["a"][0])
+
+    def test_release_is_ownership_checked(self):
+        a = wire.FrameArena()
+        owned = a.take(8)
+        stray = a.take(8)                   # busy fallback, off-arena
+        a.release(stray)                    # no-op: not the arena buffer
+        a.take(8)
+        assert a.busy_allocs == 2           # checkout still held
+        a.release(owned)
+        a.take(8)
+        assert a.reuse_hits == 1            # genuinely released
+        a.release()                         # bare release: unconditional
+        a.take(8)
+        assert a.reuse_hits == 2
+
+    def test_arena_released_when_compression_wins(self):
+        broker = SimBroker()
+        tx = MQTTFC(broker, "ctx", compress_threshold=64)
+        rx = MQTTFC(broker, "crx")
+        got = []
+        rx.subscribe_raw("t/c", lambda t, p: got.append(np.array(p["a"][0])))
+        arr = np.zeros(4096, dtype=np.float32)      # highly compressible
+        tx.call("t/c", arr)
+        tx.call("t/c", arr)
+        st = tx.wire_stats()
+        assert st["compress_wins"] >= 1
+        assert st["arena_busy_allocs"] == 0         # checkout was released
+        assert st["arena_reuse_hits"] >= 1
+        assert len(got) == 2
+        np.testing.assert_array_equal(got[-1], arr)
+
+    def test_mqttfc_steady_state_reuses_arena(self):
+        broker = SimBroker()
+        tx = MQTTFC(broker, "tx")
+        rx = MQTTFC(broker, "rx")
+        got = []
+        rx.subscribe_raw("t/x", lambda t, p: got.append(np.array(p["a"][0])))
+        arr = np.arange(256, dtype=np.float32)
+        tx.call("t/x", arr)
+        tx.call("t/x", arr)
+        assert len(got) == 2
+        np.testing.assert_array_equal(got[0], arr)
+        np.testing.assert_array_equal(got[1], arr)
+        st = tx.wire_stats()
+        assert st["arena_grows"] >= 1
+        assert st["arena_reuse_hits"] >= 1   # second call reused the buffer
+        assert st["arena_busy_allocs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Instrumented federation (the tentpole acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _run_session(metrics, rounds=2, n=4):
+    fed = Federation(metrics=metrics)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients)
+    params = {f"c{i}": {"w": np.full((4, 2), float(i) + 0.25, np.float32)}
+              for i in range(n)}
+    session.run(lambda cid, g, r: (params[cid], 1 + int(cid[1:])),
+                initial_params={"w": np.zeros((4, 2), np.float32)})
+    return fed, session
+
+
+def test_metrics_default_off_and_bit_identical():
+    fed_off, s_off = _run_session(metrics=None)
+    assert fed_off.obs is None
+    assert fed_off.metrics is None and fed_off.tracer is None
+    fed_on, s_on = _run_session(metrics=True)
+    assert fed_on.metrics is not None
+    np.testing.assert_array_equal(s_off.global_params()["w"],
+                                  s_on.global_params()["w"])
+    assert s_off.global_version() == s_on.global_version()
+
+
+def test_instrumented_run_exposes_all_subsystems():
+    fed, session = _run_session(metrics=True)
+    text = fed.metrics.render_prom()
+    series = [l for l in text.splitlines() if l and not l.startswith("#")]
+    assert len(series) >= 20                 # acceptance: 20+ distinct series
+    names = {l.split("{", 1)[0].split(" ", 1)[0] for l in series}
+    for prefix in ("sdflmq_broker_", "sdflmq_wire_", "sdflmq_acc_",
+                   "sdflmq_coordinator_", "sdflmq_trace_", "sdflmq_round_"):
+        assert any(n.startswith(prefix) for n in names), prefix
+    # pulled gauges mirror the source-of-truth counters exactly
+    snap = fed.metrics.snapshot()
+    assert snap["sdflmq_broker_messages_sent"]["samples"][""] == \
+        fed.transport.sys_stats()["messages_sent"]
+    c0 = 'client="c0"'
+    assert snap["sdflmq_wire_calls_sent"]["samples"][c0] == \
+        fed.clients["c0"].fc.wire_stats()["calls_sent"]
+
+
+def test_trace_covers_round_lifecycle():
+    fed, session = _run_session(metrics=True)
+    kinds = fed.tracer.kinds()
+    for kind in ("round_start", "train", "contribute", "flush", "mint",
+                 "round_complete", "session_end", "publish", "deliver"):
+        assert kinds.get(kind, 0) > 0, kind
+    # per-round latency histograms were fed by the coordinator
+    snap = fed.metrics.snapshot()
+    virt = snap["sdflmq_round_virtual_seconds"]["samples"]['session="s"']
+    assert virt["count"] == 2                # one observation per round
+    # the trace counter agrees with the ring
+    assert sum(kinds.values()) == fed.tracer.emitted
+
+
+def test_metrics_accepts_registry_and_telemetry_instances():
+    reg = MetricsRegistry()
+    fed, _ = _run_session(metrics=reg)
+    assert fed.metrics is reg
+    tel = Telemetry()
+    fed2 = Federation(metrics=tel)
+    assert fed2.obs is tel and fed2.metrics is tel.registry
+
+
+def test_partition_heal_timeline_in_virtual_order():
+    """Acceptance: a partition-heal scenario's ``report.timeline`` shows the
+    partition, the heal, and post-heal reconvergence (rounds completing,
+    globals minting) as labeled events in virtual-time order."""
+    n, rounds = 6, 6
+    fed = Federation(latency=dict(delay_s=0.01, seed=11),
+                     aggregator_ratio=0.4, metrics=True)
+    clients = [fed.client(f"c{i}") for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients)
+    groups = [[f"c{i}" for i in range(3)], [f"c{i}" for i in range(3, n)]]
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(n)}
+    report = scenarios.play(
+        session, lambda cid, g, r: (params[cid], 1),
+        events=[scenarios.partition(groups, t0=1.5, t1=3.5)],
+        rounds=rounds, round_time_s=1.0)
+
+    assert report.final_state == "terminated" and not report.stalled
+    ts = [t for t, _ in report.timeline]
+    assert ts == sorted(ts)                  # virtual-time order
+    labels = [lbl for _, lbl in report.timeline]
+    i_part = next(i for i, l in enumerate(labels) if l.startswith("partition"))
+    i_heal = next(i for i, l in enumerate(labels) if l.startswith("heal"))
+    assert i_part < i_heal
+    t_heal = report.timeline[i_heal][0]
+    assert t_heal == pytest.approx(3.5)
+    # reconvergence: rounds keep completing and globals keep minting after
+    # the heal
+    assert any(t > t_heal and l.startswith("round_complete")
+               for t, l in report.timeline)
+    assert any(t > t_heal and l.startswith("mint") for t, l in report.timeline)
+    # the noisy data plane stays out of the compact timeline
+    assert not any(l.startswith(("publish", "deliver")) for l in labels)
+
+
+def test_timeline_breadcrumbs_preserved_when_metrics_off():
+    fed = Federation(latency=dict(delay_s=0.01, seed=11))
+    clients = [fed.client(f"c{i}") for i in range(3)]
+    session = fed.create_session("s", "m", rounds=2, participants=clients)
+    params = {f"c{i}": {"w": np.full(3, float(i), np.float32)}
+              for i in range(3)}
+    report = scenarios.play(session, lambda cid, g, r: (params[cid], 1),
+                            rounds=2, round_time_s=1.0)
+    assert report.timeline                   # the bare "round N" breadcrumbs
+    assert all(lbl.startswith("round") for _, lbl in report.timeline)
+
+
+_TARGETS = {f"c{i}": float(i) for i in range(8)}
+
+
+def _pull_train(cid, g, r):
+    base = np.zeros(4, np.float32) if g is None else np.asarray(g["w"])
+    tgt = np.full(4, _TARGETS.get(cid, 3.0), np.float32)
+    return {"w": (base + np.float32(0.4) * (tgt - base))}, 1
+
+
+def test_async_run_feeds_staleness_histogram_and_timeline():
+    fed = Federation(latency=dict(delay_s=0.01, jitter_s=0.005, seed=42),
+                     aggregator_ratio=0.4, metrics=True)
+    clients = [fed.client(f"c{i}") for i in range(5)]
+    session = fed.create_session(
+        "s", "m", rounds=6, participants=clients,
+        async_mode=dict(buffer_k=3, staleness_bound=4, base_period_s=1.0,
+                        period_jitter_s=0.1, seed=7))
+    session.start()
+    report = scenarios.play_async(
+        session, _pull_train, max_time_s=120.0,
+        initial_params={"w": np.zeros(4, np.float32)})
+    assert report.final_state == "terminated"
+    assert report.timeline                   # trace-derived timeline
+    assert any(lbl.startswith("round_complete") for _, lbl in report.timeline)
+    snap = fed.metrics.snapshot()
+    hist = snap["sdflmq_async_staleness_versions"]["samples"][""]
+    assert hist["count"] > 0                 # every async arrival observed
+    admitted = sum(snap["sdflmq_async_admitted"]["samples"].values())
+    assert admitted == report.admitted > 0
+    kinds = fed.tracer.kinds()
+    assert kinds.get("train", 0) > 0 and kinds.get("round_complete", 0) > 0

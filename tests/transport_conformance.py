@@ -26,10 +26,14 @@ missing) and by the CI ``mqtt`` job, which runs all four legs.
 """
 from __future__ import annotations
 
+import numpy as np
 import pytest
 
 from repro.api.transport import LatencyTransport, SimClock
-from repro.core.broker import Message, SimBroker, topic_matches
+from repro.core.broker import (Message, SimBroker, frame_part_info,
+                               topic_matches)
+from repro.core.mqttfc import MQTTFC
+from repro.obs import SYS_CORE
 
 BACKENDS = [
     "simbroker",
@@ -276,6 +280,55 @@ def test_retained_not_replayed_for_earlier_subscriptions(backend):
     assert payloads_of(got) == [b"v1"]      # exactly once, not re-replayed
 
 
+def test_retained_multipart_replay(backend):
+    """A retained multi-frame MQTTFC call replays EVERY frame to a late
+    subscriber (the broker keys the retained sequence by (sender, call_id)),
+    not just the last frame — which would make large retained globals
+    unreassemblable after a reconnect."""
+    pub = MQTTFC(backend.transport, "rpub", max_batch_bytes=256,
+                 compress_threshold=1 << 30)
+    arr = np.arange(512, dtype=np.float32)          # ~2 KiB -> many frames
+    pub.call("sdflmq/session/s/global", arr, retain=True)
+    backend.settle()
+    assert pub.wire_stats()["parts_sent"] > 1       # genuinely multi-part
+    got = []
+    late = MQTTFC(backend.transport, "rlate", compress_threshold=1 << 30)
+    late.subscribe_raw("sdflmq/session/s/global",
+                       lambda t, p: got.append(np.array(p["a"][0])))
+    backend.settle()
+    assert len(got) == 1                            # reassembled exactly once
+    np.testing.assert_array_equal(got[0], arr)
+
+    # last-value-wins still holds call-to-call: a later retained call
+    # (here a short single-frame one) replaces the whole sequence
+    small = np.ones(4, dtype=np.float32)
+    pub.call("sdflmq/session/s/global", small, retain=True)
+    backend.settle()
+    got2 = []
+    late2 = MQTTFC(backend.transport, "rlate2", compress_threshold=1 << 30)
+    late2.subscribe_raw("sdflmq/session/s/global",
+                        lambda t, p: got2.append(np.array(p["a"][0])))
+    backend.settle()
+    assert len(got2) == 1
+    np.testing.assert_array_equal(got2[0], small)
+
+
+def test_frame_part_info_sniffer_tolerates_opaque_payloads():
+    """The retained-store sniffer must never misparse application bytes."""
+    import msgpack
+    assert frame_part_info(b"") is None
+    assert frame_part_info(b"v1") is None
+    assert frame_part_info(b"\x00\x00\x00\x04abcd") is None
+    assert frame_part_info(b"\xff\xff\xff\xff" + b"x" * 16) is None
+    # a msgpack body that is not a frame header tuple
+    junk = msgpack.packb({"a": 1})
+    assert frame_part_info(len(junk).to_bytes(4, "big") + junk) is None
+    # a genuine frame header parses
+    hdr = msgpack.packb(("me", 7, 1, 4, 0, None, 1024, 256))
+    payload = len(hdr).to_bytes(4, "big") + hdr + b"chunk"
+    assert frame_part_info(payload) == ("me", 7, 1, 4)
+
+
 def test_retained_cleared_by_empty_payload(backend):
     backend.transport.connect("pub", lambda m: None)
     backend.transport.publish("sdflmq/topo", b"v1", qos=1, retain=True,
@@ -363,3 +416,52 @@ def test_sys_stats_exposed(backend):
     stats = backend.transport.sys_stats()
     assert isinstance(stats, dict) and stats
     assert payloads_of(got) == [b"x"]
+
+
+# ---------------------------------------------------------------------------
+# stats parity (the surface the metrics layer scrapes)
+# ---------------------------------------------------------------------------
+
+def test_sys_stats_core_schema(backend):
+    """Every backend exposes the canonical SYS_CORE counter names with
+    consistent values after deterministic traffic, so ``repro.obs`` can
+    scrape any of them interchangeably."""
+    backend.collector("sub")
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.subscribe("sub", "sdflmq/core", qos=1)
+    for _ in range(3):
+        backend.transport.publish("sdflmq/core", b"x" * 10, qos=1,
+                                  sender="pub")
+    backend.settle()
+    stats = backend.transport.sys_stats()
+    for k in SYS_CORE:
+        assert k in stats, k
+        assert isinstance(stats[k], int) and stats[k] >= 0, k
+    # 3 publishes in, 3 deliveries out — whichever side of the wire the
+    # backend counts from, both directions saw at least that much
+    assert stats["messages_received"] >= 3
+    assert stats["messages_sent"] >= 3
+    assert stats["bytes_received"] >= 30
+    assert stats["bytes_sent"] >= 30
+
+
+def test_wire_stats_schema_parity(backend):
+    """MQTTFC endpoints report the same wire_stats key set on every
+    backend, and sender/receiver counters agree: what one endpoint sent is
+    exactly what the other received."""
+    tx = MQTTFC(backend.transport, "wtx", compress_threshold=1 << 30)
+    rx = MQTTFC(backend.transport, "wrx", compress_threshold=1 << 30)
+    got = []
+    rx.subscribe_raw("sdflmq/wire/x", lambda t, p: got.append(p["a"][0]))
+    arr = np.arange(64, dtype=np.float32)
+    tx.call("sdflmq/wire/x", arr)
+    tx.call("sdflmq/wire/x", arr)
+    backend.settle()
+    assert len(got) == 2
+    s, r = tx.wire_stats(), rx.wire_stats()
+    assert set(s) == set(r)                         # one schema everywhere
+    assert s["calls_sent"] == 2
+    assert r["calls_received"] == s["calls_sent"]
+    assert r["parts_received"] == s["parts_sent"]
+    assert r["bytes_received"] == s["bytes_sent"]
+    assert s["arena_reuse_hits"] >= 1               # steady-state encode
