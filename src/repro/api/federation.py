@@ -133,6 +133,11 @@ class Federation:
                 self.obs = Telemetry(registry=reg, clock=self.clock)
             self.obs.bind_federation(self)
             self.transport.obs = self.obs
+            # a wrapped transport (LatencyTransport over PahoTransport)
+            # traces reconnect/backoff events from the inner layer
+            inner = getattr(self.transport, "inner", None)
+            if inner is not None:
+                inner.obs = self.obs
             self.coordinator.obs = self.obs
 
     def deliver(self) -> None:

@@ -22,9 +22,17 @@ routing structure (and therefore the same wildcard semantics) as
 ``SimBroker``, so the two backends can be certified against one
 conformance contract (``tests/transport_conformance.py``).
 
-Not implemented (rejected or degraded cleanly): QoS 2 (granted as QoS 1),
-persistent sessions (CONNACK always reports a clean session), and
-authentication (username/password bytes are parsed and ignored).
+Persistent sessions are supported: a CONNECT with ``clean_session=0``
+stores the session — subscriptions survive the connection, QoS-1 messages
+routed while the client is offline are queued (bounded), unacked PUBLISHes
+are redelivered with the DUP flag (same packet ids) on resume, and the
+CONNACK reports ``session present``.  MQTT 5-style shared subscriptions
+(``$share/<group>/<filter>``) round-robin each message across the group.
+Session state lives in process memory only — a broker restart starts
+empty, exactly like an unpersisted Mosquitto.
+
+Not implemented (rejected or degraded cleanly): QoS 2 (granted as QoS 1)
+and authentication (username/password bytes are parsed and ignored).
 
 The broker runs its asyncio loop on a daemon thread; ``start()`` returns
 once the socket is bound (``port=0`` picks a free port, exposed as
@@ -45,11 +53,11 @@ from __future__ import annotations
 import argparse
 import asyncio
 import threading
-from collections import defaultdict
+from collections import OrderedDict, defaultdict, deque
 from typing import Optional
 
-from repro.core.broker import (Message, RetainedSeq, TopicTrie, retain_message,
-                               topic_matches)
+from repro.core.broker import (Message, RetainedSeq, TopicTrie, parse_share,
+                               retain_message, topic_matches)
 
 # MQTT 3.1.1 control-packet types (spec §2.2.1)
 CONNECT, CONNACK, PUBLISH, PUBACK = 1, 2, 3, 4
@@ -143,13 +151,14 @@ class _Conn:
     """One live client connection (all state touched only on the broker's
     event loop)."""
 
-    __slots__ = ("client_id", "writer", "subs", "will_topic", "will_payload",
-                 "will_qos", "will_retain", "graceful", "closed")
+    __slots__ = ("client_id", "writer", "session", "will_topic",
+                 "will_payload", "will_qos", "will_retain", "graceful",
+                 "closed")
 
     def __init__(self, writer: asyncio.StreamWriter):
         self.client_id = ""
         self.writer = writer
-        self.subs: dict[str, int] = {}         # topic filter -> granted qos
+        self.session: Optional["_Session"] = None
         self.will_topic: Optional[str] = None
         self.will_payload = b""
         self.will_qos = 0
@@ -163,6 +172,31 @@ class _Conn:
                 self.writer.write(frame)
             except Exception:       # peer vanished mid-write
                 self.closed = True
+
+
+class _Session:
+    """Per-client-id broker session state.  Clean sessions die with their
+    connection; persistent ones (CONNECT clean_session=0) keep their
+    subscriptions, queue QoS-1 traffic while offline, and track unacked
+    PUBLISHes for DUP redelivery on resume [MQTT-3.1.2-4..7]."""
+
+    __slots__ = ("client_id", "clean", "subs", "queued", "inflight",
+                 "next_mid", "conn")
+
+    def __init__(self, client_id: str, clean: bool):
+        self.client_id = client_id
+        self.clean = clean
+        self.subs: dict[str, int] = {}          # topic filter -> granted qos
+        # (topic, payload, qos, retain) routed while offline
+        self.queued: deque = deque()
+        # mid -> (topic, payload, qos, retain): sent but not PUBACKed
+        self.inflight: "OrderedDict[int, tuple]" = OrderedDict()
+        self.next_mid = 0
+        self.conn: Optional[_Conn] = None
+
+    @property
+    def online(self) -> bool:
+        return self.conn is not None and not self.conn.closed
 
 
 class MiniBroker:
@@ -188,17 +222,19 @@ class MiniBroker:
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 name: str = "mini0"):
+                 name: str = "mini0", offline_queue_limit: int = 10_000):
         self.name = name
         self.host = host
         self.port = port
+        self.offline_queue_limit = offline_queue_limit
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._thread: Optional[threading.Thread] = None
-        self._conns: dict[str, _Conn] = {}
+        self._sessions: dict[str, _Session] = {}
         self._retained: dict[str, RetainedSeq] = {}
         self._trie = TopicTrie()
-        self._mids = 0
+        # per-(group, real-filter) round-robin cursor for $share routing
+        self._share_rr: dict[tuple, int] = {}
         # $SYS-style counters (same keys as SimBroker's SysStats snapshot)
         self.messages_received = 0
         self.messages_sent = 0
@@ -206,6 +242,12 @@ class MiniBroker:
         self.bytes_sent = 0
         self.dropped_no_subscriber = 0
         self.pings = 0
+        self.sessions_resumed = 0
+        self.queued_offline = 0
+        self.dropped_offline = 0
+        self.redeliveries = 0
+        self.shared_deliveries = 0
+        self.queue_overflow = 0
         self.per_topic_class: dict[str, int] = defaultdict(int)
 
     # ---- lifecycle -------------------------------------------------------
@@ -244,9 +286,10 @@ class MiniBroker:
             return
 
         async def _shutdown():
-            for conn in list(self._conns.values()):
-                conn.graceful = True        # broker shutdown fires no wills
-                self._drop(conn)
+            for sess in list(self._sessions.values()):
+                if sess.conn is not None:
+                    sess.conn.graceful = True   # shutdown fires no wills
+                    self._drop(sess.conn)
             if self._server is not None:
                 self._server.close()
                 await self._server.wait_closed()
@@ -261,6 +304,47 @@ class MiniBroker:
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
+
+    def kill(self) -> None:
+        """Abrupt broker death (SIGKILL semantics): every socket is aborted
+        mid-flight — no DISCONNECTs, no wills, no graceful teardown.
+        Clients observe a dead TCP connection, exactly as if the broker
+        process was killed.  The broker object can be ``start()``-ed again
+        afterwards; in-memory session state does NOT survive the kill
+        (sessions/retained are wiped), matching an unpersisted broker."""
+        loop, self._loop = self._loop, None
+        if loop is None or not loop.is_running():
+            return
+
+        async def _die():
+            for sess in list(self._sessions.values()):
+                conn = sess.conn
+                if conn is not None and not conn.closed:
+                    conn.closed = True      # suppress _drop bookkeeping
+                    try:
+                        conn.writer.transport.abort()
+                    except Exception:
+                        pass
+            if self._server is not None:
+                self._server.close()
+                await self._server.wait_closed()
+            me = asyncio.current_task()
+            handlers = [t for t in asyncio.all_tasks() if t is not me]
+            for t in handlers:
+                t.cancel()
+            await asyncio.gather(*handlers, return_exceptions=True)
+            loop.stop()
+
+        asyncio.run_coroutine_threadsafe(_die(), loop)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        # a killed broker lost its RAM: fresh state for any restart
+        self._sessions.clear()
+        self._retained.clear()
+        self._trie = TopicTrie()
+        self._share_rr.clear()
+        self._server = None
 
     def __enter__(self) -> "MiniBroker":
         return self.start()
@@ -320,7 +404,9 @@ class MiniBroker:
             self.pings += 1
             conn.send(packet(PINGRESP, 0))
         elif ptype == PUBACK:
-            cur.u16()                   # at-least-once: ack is advisory
+            mid = cur.u16()
+            if conn.session is not None:            # settles DUP redelivery
+                conn.session.inflight.pop(mid, None)
         elif ptype == CONNECT:
             raise ProtocolError("duplicate CONNECT")
         else:
@@ -334,6 +420,7 @@ class MiniBroker:
             conn.send(packet(CONNACK, 0, bytes((0, 0x01))))  # bad proto
             raise ProtocolError(f"unsupported protocol {proto!r} v{level}")
         cflags = cur.u8()
+        clean = bool(cflags & 0x02)
         cur.u16()                                   # keepalive: not enforced
         conn.client_id = cur.utf8() or f"anon-{id(conn):x}"
         if cflags & 0x04:                           # will flag
@@ -345,13 +432,38 @@ class MiniBroker:
             cur.utf8()                              # username: ignored
         if cflags & 0x40:
             cur.take(cur.u16())                     # password: ignored
-        old = self._conns.get(conn.client_id)
-        if old is not None:
+        sess = self._sessions.get(conn.client_id)
+        if sess is not None and sess.conn is not None:
             # session takeover [MQTT-3.1.4-2]: the old connection is closed
             # as a network failure, so its will (if any) IS published
-            self._drop(old)
-        self._conns[conn.client_id] = conn
-        conn.send(packet(CONNACK, 0, bytes((0, 0))))  # clean session, rc 0
+            self._drop(sess.conn)
+            sess = self._sessions.get(conn.client_id)  # _drop may forget it
+        session_present = False
+        if clean or sess is None or sess.clean:
+            if sess is not None:
+                self._forget_session(sess)
+            sess = _Session(conn.client_id, clean)
+            self._sessions[conn.client_id] = sess
+        else:
+            session_present = True
+            self.sessions_resumed += 1
+        sess.conn = conn
+        conn.session = sess
+        conn.send(packet(CONNACK, 0,
+                         bytes((0x01 if session_present else 0x00, 0))))
+        if session_present:
+            # unacked QoS-1 publishes first — same packet ids, DUP set
+            # [MQTT-4.4.0-1] — then traffic queued while offline
+            for mid, (topic, payload, qos, retain) in list(
+                    sess.inflight.items()):
+                self.redeliveries += 1
+                self.messages_sent += 1
+                self.bytes_sent += len(payload)
+                conn.send(publish_packet(topic, payload, qos, retain,
+                                         mid=mid, dup=True))
+            queued, sess.queued = sess.queued, deque()
+            for topic, payload, qos, retain in queued:
+                self._send_to(sess, topic, payload, qos, retain)
 
     def _on_publish(self, conn: _Conn, flags: int, cur: _Cursor) -> None:
         qos = (flags >> 1) & 0x03
@@ -372,37 +484,44 @@ class MiniBroker:
         self._route(topic, payload, qos, retain)
 
     def _on_subscribe(self, conn: _Conn, cur: _Cursor) -> None:
+        sess = conn.session
         mid = cur.u16()
         granted = bytearray()
-        fresh: list[str] = []
+        fresh: list[tuple[str, str, Optional[str]]] = []
         while not cur.exhausted:
             filt = cur.utf8()
             qos = min(cur.u8() & 0x03, 1)           # QoS 2 granted as QoS 1
-            conn.subs[filt] = qos
-            self._trie.insert(filt, (conn.client_id, filt))
+            group, real = parse_share(filt)
+            sess.subs[filt] = qos
+            self._trie.insert(real, (sess.client_id, filt))
             granted.append(qos)
-            fresh.append(filt)
+            fresh.append((filt, real, group))
         conn.send(packet(SUBACK, 0, mid.to_bytes(2, "big") + bytes(granted)))
         # retained replay — after the SUBACK, with the retain bit set, for
         # the filters of THIS packet only [MQTT-3.3.1-6]: earlier
-        # subscriptions already received their replay
-        for filt in fresh:
+        # subscriptions already received their replay.  Shared
+        # subscriptions get NO retained replay (MQTT 5 §4.8.2).
+        for filt, real, group in fresh:
+            if group is not None:
+                continue
             for topic, seq in list(self._retained.items()):
-                if topic_matches(filt, topic):
+                if topic_matches(real, topic):
                     # full frame sequence, in part order (multi-part
                     # fleet-control calls retain every frame, not just
                     # the last one)
                     for m in seq.messages():
-                        self._send_to(conn, topic, m.payload,
-                                      min(m.qos, conn.subs[filt]),
+                        self._send_to(sess, topic, m.payload,
+                                      min(m.qos, sess.subs[filt]),
                                       retain=True)
 
     def _on_unsubscribe(self, conn: _Conn, cur: _Cursor) -> None:
+        sess = conn.session
         mid = cur.u16()
         while not cur.exhausted:
             filt = cur.utf8()
-            if conn.subs.pop(filt, None) is not None:
-                self._trie.remove(filt, (conn.client_id, filt))
+            if sess.subs.pop(filt, None) is not None:
+                self._trie.remove(parse_share(filt)[1],
+                                  (sess.client_id, filt))
         conn.send(packet(UNSUBACK, 0, mid.to_bytes(2, "big")))
 
     # ---- routing ---------------------------------------------------------
@@ -416,47 +535,108 @@ class MiniBroker:
                 self._retained.pop(topic, None)     # empty payload clears
         matched = False
         seen: set[str] = set()
+        shared: dict[tuple, list] = {}
         for client_id, filt in self._trie.match(topic):
-            if client_id in seen:
+            sess = self._sessions.get(client_id)
+            if sess is None:
                 continue
-            seen.add(client_id)
-            conn = self._conns.get(client_id)
-            if conn is None or conn.closed:
-                continue
-            sub_qos = conn.subs.get(filt)
+            sub_qos = sess.subs.get(filt)
             if sub_qos is None:
                 continue
-            # [MQTT-3.3.1-9]: the retain flag is 0 on routed (non-replay)
-            # deliveries — only retained replay at subscribe time sets it
-            self._send_to(conn, topic, payload, min(qos, sub_qos))
-            matched = True
+            group, real = parse_share(filt)
+            eff = min(qos, sub_qos)
+            if group is not None:
+                shared.setdefault((group, real), []).append((sess, eff))
+                continue
+            if client_id in seen:           # first matching filter wins
+                continue
+            seen.add(client_id)
+            if sess.online:
+                # [MQTT-3.3.1-9]: the retain flag is 0 on routed
+                # (non-replay) deliveries — only retained replay at
+                # subscribe time sets it
+                self._send_to(sess, topic, payload, eff)
+                matched = True
+            elif not sess.clean and eff >= 1:
+                self._queue_offline(sess, topic, payload, eff)
+                matched = True
+            else:
+                self.dropped_offline += 1
+        for key, members in shared.items():
+            if self._deliver_shared(key, members, topic, payload):
+                matched = True
         if not matched:
             self.dropped_no_subscriber += 1
 
-    def _send_to(self, conn: _Conn, topic: str, payload: bytes, qos: int,
+    def _deliver_shared(self, key: tuple, members: list, topic: str,
+                        payload: bytes) -> bool:
+        """Deliver one message to exactly one member of a $share group,
+        round-robin over live members; if the whole group is offline, a
+        durable member (persistent session, effective QoS >= 1) queues it."""
+        live = [(s, q) for s, q in members if s.online]
+        if live:
+            k = self._share_rr.get(key, 0)
+            self._share_rr[key] = k + 1
+            sess, eff = live[k % len(live)]
+            self.shared_deliveries += 1
+            self._send_to(sess, topic, payload, eff)
+            return True
+        durable = [(s, q) for s, q in members if not s.clean and q >= 1]
+        if durable:
+            k = self._share_rr.get(key, 0)
+            self._share_rr[key] = k + 1
+            sess, eff = durable[k % len(durable)]
+            self._queue_offline(sess, topic, payload, eff)
+            return True
+        self.dropped_offline += 1
+        return False
+
+    def _queue_offline(self, sess: _Session, topic: str, payload: bytes,
+                       qos: int) -> None:
+        if len(sess.queued) >= self.offline_queue_limit:
+            sess.queued.popleft()           # bounded: oldest message loses
+            self.queue_overflow += 1
+        sess.queued.append((topic, payload, qos, False))
+        self.queued_offline += 1
+
+    def _send_to(self, sess: _Session, topic: str, payload: bytes, qos: int,
                  retain: bool = False) -> None:
-        self._mids = (self._mids % 0xFFFF) + 1
-        frame = publish_packet(topic, payload, qos, retain,
-                               mid=self._mids if qos else 0)
+        mid = 0
+        if qos:
+            sess.next_mid = (sess.next_mid % 0xFFFF) + 1
+            while sess.next_mid in sess.inflight:   # ids still unacked
+                sess.next_mid = (sess.next_mid % 0xFFFF) + 1
+            mid = sess.next_mid
+            if not sess.clean:
+                sess.inflight[mid] = (topic, payload, qos, retain)
+        frame = publish_packet(topic, payload, qos, retain, mid=mid)
         self.messages_sent += 1
         self.bytes_sent += len(payload)
-        conn.send(frame)
+        if sess.conn is not None:
+            sess.conn.send(frame)
 
     def _drop(self, conn: _Conn) -> None:
         if conn.closed:
             return
         conn.closed = True
-        if self._conns.get(conn.client_id) is conn:
-            del self._conns[conn.client_id]
-        for filt in conn.subs:
-            self._trie.remove(filt, (conn.client_id, filt))
+        sess = conn.session
+        if sess is not None and sess.conn is conn:
+            sess.conn = None
         if not conn.graceful and conn.will_topic is not None:
             self._route(conn.will_topic, conn.will_payload,
                         conn.will_qos, conn.will_retain)
+        if sess is not None and sess.clean and sess.conn is None \
+                and self._sessions.get(sess.client_id) is sess:
+            self._forget_session(sess)
         try:
             conn.writer.close()
         except Exception:
             pass
+
+    def _forget_session(self, sess: _Session) -> None:
+        for filt in sess.subs:
+            self._trie.remove(parse_share(filt)[1], (sess.client_id, filt))
+        self._sessions.pop(sess.client_id, None)
 
     # ---- introspection (thread-safe reads of loop-owned counters) --------
     def sys_stats(self) -> dict:
@@ -468,7 +648,16 @@ class MiniBroker:
             "dropped_no_subscriber": self.dropped_no_subscriber,
             "pings": self.pings,
             "per_topic_class": dict(self.per_topic_class),
-            "connected_clients": len(self._conns),
+            "connected_clients": sum(
+                1 for s in self._sessions.values() if s.online),
+            "persistent_sessions": sum(
+                1 for s in self._sessions.values() if not s.clean),
+            "sessions_resumed": self.sessions_resumed,
+            "queued_offline": self.queued_offline,
+            "dropped_offline": self.dropped_offline,
+            "redeliveries": self.redeliveries,
+            "shared_deliveries": self.shared_deliveries,
+            "queue_overflow": self.queue_overflow,
             "retained_messages": len(self._retained),
             "trie_cache_hits": self._trie.cache_hits,
             "trie_cache_misses": self._trie.cache_misses,

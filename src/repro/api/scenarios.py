@@ -68,12 +68,14 @@ class Partition(ScenarioEvent):
 
 @dataclass
 class FlakyLink(ScenarioEvent):
-    """Degrade one client's link (loss probability ``p`` + optional extra
+    """Degrade one client's link (loss probability ``p``, duplication
+    probability ``dup_p`` for at-least-once redelivery, optional extra
     delay/jitter) during ``[t0, t1)``; restores the previous model at t1."""
     client_id: str
     p: float = 0.0
     delay_s: float = 0.0
     jitter_s: float = 0.0
+    dup_p: float = 0.0
     t0: float = 0.0
     t1: Optional[float] = None
 
@@ -85,7 +87,8 @@ class FlakyLink(ScenarioEvent):
         def degrade():
             saved.append(transport.links.get(self.client_id))
             transport.set_link(self.client_id, delay_s=self.delay_s,
-                               jitter_s=self.jitter_s, drop_p=self.p)
+                               jitter_s=self.jitter_s, drop_p=self.p,
+                               dup_p=self.dup_p)
 
         def restore():
             prev = saved.pop() if saved else None
@@ -145,9 +148,9 @@ def partition(groups: Sequence[Sequence[str]], t0: float = 0.0,
 
 
 def flaky_link(client_id: str, p: float = 0.0, delay_s: float = 0.0,
-               jitter_s: float = 0.0, t0: float = 0.0,
+               jitter_s: float = 0.0, dup_p: float = 0.0, t0: float = 0.0,
                t1: Optional[float] = None) -> FlakyLink:
-    return FlakyLink(client_id, p, delay_s, jitter_s, t0, t1)
+    return FlakyLink(client_id, p, delay_s, jitter_s, dup_p, t0, t1)
 
 
 def churn(plan: Optional[FailurePlan] = None, *,

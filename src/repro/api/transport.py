@@ -56,7 +56,8 @@ class Transport(Protocol):
     name: str
 
     def connect(self, client_id: str, on_message: Callable,
-                will: Optional[Any] = None) -> Any: ...
+                will: Optional[Any] = None,
+                clean_session: Optional[bool] = None) -> Any: ...
 
     def disconnect(self, client_id: str, graceful: bool = True) -> None: ...
 
@@ -312,10 +313,14 @@ class _PeriodicTimer:
 
 @dataclass
 class LinkModel:
-    """Per-link network parameters (seconds / probability)."""
+    """Per-link network parameters (seconds / probability).  ``dup_p`` is
+    the probability that a QoS>=1 publish is *redelivered* — the broker's
+    at-least-once duplicate, arriving as a genuine second copy after the
+    original (possibly after newer frames), exercising receiver dedup."""
     delay_s: float = 0.0
     jitter_s: float = 0.0
     drop_p: float = 0.0
+    dup_p: float = 0.0
 
 
 @dataclass
@@ -323,6 +328,7 @@ class _LinkStats:
     messages: int = 0
     dropped: int = 0
     retransmits: int = 0
+    duplicates: int = 0
     latency_s: float = 0.0
     max_latency_s: float = 0.0
 
@@ -350,10 +356,11 @@ class LatencyTransport:
     """
 
     def __init__(self, inner: Transport, delay_s: float = 0.0,
-                 jitter_s: float = 0.0, drop_p: float = 0.0, seed: int = 0,
+                 jitter_s: float = 0.0, drop_p: float = 0.0,
+                 dup_p: float = 0.0, seed: int = 0,
                  clock: Optional[SimClock] = None):
         self.inner = inner
-        self.default = LinkModel(delay_s, jitter_s, drop_p)
+        self.default = LinkModel(delay_s, jitter_s, drop_p, dup_p)
         self.links: dict[str, LinkModel] = {}
         self.seed = seed
         self._rngs: dict[str, random.Random] = {}
@@ -386,8 +393,9 @@ class LatencyTransport:
         return self.clock.now
 
     def set_link(self, client_id: str, delay_s: float = 0.0,
-                 jitter_s: float = 0.0, drop_p: float = 0.0) -> None:
-        self.links[client_id] = LinkModel(delay_s, jitter_s, drop_p)
+                 jitter_s: float = 0.0, drop_p: float = 0.0,
+                 dup_p: float = 0.0) -> None:
+        self.links[client_id] = LinkModel(delay_s, jitter_s, drop_p, dup_p)
 
     def clear_link(self, client_id: str) -> None:
         self.links.pop(client_id, None)
@@ -440,7 +448,8 @@ class LatencyTransport:
             fn(msg)
 
     # ---- Transport surface ----------------------------------------------
-    def connect(self, client_id, on_message, will=None):
+    def connect(self, client_id, on_message, will=None,
+                clean_session: Optional[bool] = None):
         self._callbacks[client_id] = on_message
 
         def guarded(msg, _cid=client_id, _fn=on_message):
@@ -454,7 +463,8 @@ class LatencyTransport:
                 return
             _fn(msg)
 
-        return self.inner.connect(client_id, guarded, will=will)
+        return self.inner.connect(client_id, guarded, will=will,
+                                  clean_session=clean_session)
 
     def disconnect(self, client_id, graceful: bool = True):
         self._callbacks.pop(client_id, None)
@@ -491,6 +501,18 @@ class LatencyTransport:
         self.clock.schedule(
             arrival,
             lambda: self._deliver(topic, payload, qos, retain, sender))
+        if link.dup_p and qos >= 1 and not retain \
+                and rng.random() < link.dup_p:
+            # broker at-least-once redelivery: a genuine second copy of the
+            # same frame, arriving after the original — deliberately NOT
+            # clamped to the per-sender FIFO horizon, so it can land after
+            # newer frames, exactly like a real broker's retransmit
+            st.duplicates += 1
+            dup_arrival = arrival + max(lat, 1e-6) \
+                + rng.uniform(0.0, link.jitter_s + link.delay_s)
+            self.clock.schedule(
+                dup_arrival,
+                lambda: self._deliver(topic, payload, qos, retain, sender))
         if not self.clock.held:
             self.clock.run_until_idle()
         return 0
@@ -514,7 +536,7 @@ class LatencyTransport:
         out["partition_dropped"] = self.partition_dropped
         out["links"] = {
             k: {"messages": s.messages, "dropped": s.dropped,
-                "retransmits": s.retransmits,
+                "retransmits": s.retransmits, "duplicates": s.duplicates,
                 "mean_latency_ms": round(
                     1e3 * s.latency_s / s.messages, 3) if s.messages else 0.0,
                 "max_latency_ms": round(1e3 * s.max_latency_s, 3)}

@@ -46,6 +46,22 @@ class Subscription:
     qos: int = 0
 
 
+def parse_share(topic_filter: str) -> tuple[Optional[str], str]:
+    """Split an MQTT 5 shared-subscription filter.
+
+    ``$share/<group>/<real filter>`` -> ``(group, real_filter)``; anything
+    else -> ``(None, topic_filter)``.  Malformed ``$share`` filters (no
+    group or no real filter) are treated as ordinary filters — they then
+    fall under the ``$``-topic rule and simply never match."""
+    if not topic_filter.startswith("$share/"):
+        return None, topic_filter
+    rest = topic_filter[len("$share/"):]
+    group, sep, real = rest.partition("/")
+    if not group or not sep or not real:
+        return None, topic_filter
+    return group, real
+
+
 def topic_matches(topic_filter: str, topic: str) -> bool:
     """MQTT 3.1.1 wildcard matching: ``+`` one level, ``#`` trailing
     multi-level (also covering the parent level), and topics whose first
@@ -260,6 +276,10 @@ class _ClientSession:
     will: Optional[Message] = None
     subscriptions: dict[str, int] = field(default_factory=dict)
     connected: bool = True
+    clean_session: bool = True
+    # QoS-1 messages routed while a persistent session is offline, replayed
+    # in order on resume: (msg, effective_qos)
+    queued: deque = field(default_factory=deque)
     inflight_acks: set = field(default_factory=set)
     seen_mids: set = field(default_factory=set)
 
@@ -275,6 +295,10 @@ class SysStats:
         self.dropped_no_subscriber = 0
         self.per_topic_class: dict[str, int] = defaultdict(int)
         self.bridge_forwards = 0
+        self.sessions_resumed = 0
+        self.queued_offline = 0
+        self.dropped_offline = 0
+        self.shared_deliveries = 0
 
     def snapshot(self) -> dict:
         return {
@@ -284,6 +308,10 @@ class SysStats:
             "bytes_sent": self.bytes_sent,
             "dropped_no_subscriber": self.dropped_no_subscriber,
             "bridge_forwards": self.bridge_forwards,
+            "sessions_resumed": self.sessions_resumed,
+            "queued_offline": self.queued_offline,
+            "dropped_offline": self.dropped_offline,
+            "shared_deliveries": self.shared_deliveries,
             "per_topic_class": dict(self.per_topic_class),
         }
 
@@ -341,40 +369,71 @@ class SimBroker:
         # subscription trie: value = (client_id, filter); match(topic) is
         # O(topic levels), memoized per topic, invalidated on sub changes
         self._trie = TopicTrie()
+        # per-(group, real-filter) round-robin cursor for $share delivery
+        self._share_rr: dict[tuple, int] = {}
         self.stats = SysStats()
         self.delivery_log: list[tuple[str, str, int]] = []  # (topic, client, size)
         self.log_deliveries = False
 
     # ---- connection lifecycle -------------------------------------------
     def connect(self, client_id: str, on_message: Callable[[Message], None],
-                will: Optional[Message] = None) -> _ClientSession:
+                will: Optional[Message] = None,
+                clean_session: Optional[bool] = None) -> _ClientSession:
+        """``clean_session=False`` opts into MQTT persistent-session
+        semantics: subscriptions survive a disconnect, and QoS-1 messages
+        routed while the client is offline are queued and replayed in order
+        when it reconnects with ``clean_session=False`` again.  ``None``
+        (the default) means the backend default — a clean session."""
+        clean = True if clean_session is None else bool(clean_session)
         old = self._clients.get(client_id)
-        if old is not None:        # reconnect: the old session's subs die
+        if old is not None and not clean and not old.clean_session:
+            # resume the stored session: subscriptions stay in the trie
+            was_offline = not old.connected
+            old.on_message = on_message
+            old.will = will
+            old.connected = True
+            if was_offline:
+                self.stats.sessions_resumed += 1
+                while old.queued:
+                    msg, eff = old.queued.popleft()
+                    self._deliver(old, msg, eff)
+            return old
+        if old is not None:        # clean reconnect: the old session's subs die
             for filt in old.subscriptions:
-                self._trie.remove(filt, (client_id, filt))
-        sess = _ClientSession(client_id, on_message, will)
+                self._trie.remove(parse_share(filt)[1], (client_id, filt))
+        sess = _ClientSession(client_id, on_message, will, clean_session=clean)
         self._clients[client_id] = sess
         return sess
 
     def disconnect(self, client_id: str, graceful: bool = True) -> None:
-        sess = self._clients.pop(client_id, None)
+        sess = self._clients.get(client_id)
         if sess is None:
             return
-        sess.connected = False
-        for filt in sess.subscriptions:
-            self._trie.remove(filt, (client_id, filt))
-        if not graceful and sess.will is not None:
-            self.publish(sess.will.topic, sess.will.payload,
-                         qos=sess.will.qos, retain=sess.will.retain)
+        will = sess.will
+        if sess.clean_session:
+            self._clients.pop(client_id, None)
+            sess.connected = False
+            for filt in sess.subscriptions:
+                self._trie.remove(parse_share(filt)[1], (client_id, filt))
+        else:
+            # persistent session: keep subscriptions, start queueing QoS 1
+            sess.connected = False
+            sess.will = None       # the will belongs to the dead connection
+        if not graceful and will is not None:
+            self.publish(will.topic, will.payload,
+                         qos=will.qos, retain=will.retain)
 
     # ---- subscriptions ---------------------------------------------------
     def subscribe(self, client_id: str, topic_filter: str, qos: int = 0) -> None:
         sess = self._clients[client_id]
         sess.subscriptions[topic_filter] = qos
-        self._trie.insert(topic_filter, (client_id, topic_filter))
+        group, real = parse_share(topic_filter)
+        self._trie.insert(real, (client_id, topic_filter))
+        if group is not None:
+            return      # retained messages are not sent to shared subs
         # retained delivery: the full frame sequence, in part order
         for topic, seq in list(self._retained.items()):
-            if topic_matches(topic_filter, topic):
+            if topic_matches(real, topic):
                 for msg in seq.messages():
                     self._deliver(sess, msg)
 
@@ -383,7 +442,8 @@ class SimBroker:
         if sess is None:
             return
         if sess.subscriptions.pop(topic_filter, None) is not None:
-            self._trie.remove(topic_filter, (client_id, topic_filter))
+            self._trie.remove(parse_share(topic_filter)[1],
+                              (client_id, topic_filter))
 
     def subscriptions_of(self, client_id: str) -> list[str]:
         return list(self._clients[client_id].subscriptions)
@@ -424,18 +484,35 @@ class SimBroker:
                 self._retained.pop(msg.topic, None)
         matched = False
         seen: set[str] = set()      # first matching filter per client wins
+        shared: dict[tuple, list] = {}   # (group, real) -> [(sess, eff_qos)]
         for client_id, filt in self._trie.match(msg.topic):
-            if client_id in seen:
-                continue
-            seen.add(client_id)
             sess = self._clients.get(client_id)
-            if sess is None or not sess.connected:
+            if sess is None:
                 continue
             sub_qos = sess.subscriptions.get(filt)
             if sub_qos is None:
                 continue
-            self._deliver(sess, msg, min(msg.qos, sub_qos))
+            eff_qos = min(msg.qos, sub_qos)
+            group, real = parse_share(filt)
+            if group is not None:
+                shared.setdefault((group, real), []).append((sess, eff_qos))
+                continue
+            if client_id in seen:
+                continue
+            seen.add(client_id)
+            if not sess.connected:
+                if not sess.clean_session and eff_qos >= 1:
+                    sess.queued.append((msg, eff_qos))
+                    self.stats.queued_offline += 1
+                    matched = True
+                else:
+                    self.stats.dropped_offline += 1
+                continue
+            self._deliver(sess, msg, eff_qos)
             matched = True
+        for key, members in shared.items():
+            if self._deliver_shared(key, members, msg):
+                matched = True
         if not matched:
             self.stats.dropped_no_subscriber += 1
         # bridge forwarding with loop prevention
@@ -444,6 +521,31 @@ class SimBroker:
                 continue
             if any(topic_matches(f, msg.topic) for f in br.filters):
                 br.forward(self, msg)
+
+    def _deliver_shared(self, key: tuple, members: list,
+                        msg: Message) -> bool:
+        """One delivery per ``$share`` group: round-robin over the live
+        members (in subscribe order); with every member offline, queue to
+        the next persistent member instead so no QoS-1 message is lost."""
+        live = [(s, q) for s, q in members if s.connected]
+        if live:
+            k = self._share_rr.get(key, 0)
+            sess, eff_qos = live[k % len(live)]
+            self._share_rr[key] = k + 1
+            self.stats.shared_deliveries += 1
+            self._deliver(sess, msg, eff_qos)
+            return True
+        durable = [(s, q) for s, q in members
+                   if not s.clean_session and q >= 1]
+        if durable:
+            k = self._share_rr.get(key, 0)
+            sess, eff_qos = durable[k % len(durable)]
+            self._share_rr[key] = k + 1
+            sess.queued.append((msg, eff_qos))
+            self.stats.queued_offline += 1
+            return True
+        self.stats.dropped_offline += 1
+        return False
 
     def _deliver(self, sess: _ClientSession, msg: Message, eff_qos: int = 0) -> None:
         if eff_qos >= 1:

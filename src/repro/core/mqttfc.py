@@ -151,6 +151,9 @@ class _FrameAssembly:
             return self.buf
         return None
 
+    def has(self, idx: int) -> bool:
+        return idx in self.got
+
     @property
     def nbytes(self) -> int:
         return len(self.buf)
@@ -171,6 +174,9 @@ class _LegacyAssembly:
         if len(self.parts) == self.n_parts:
             return b"".join(self.parts[i] for i in range(self.n_parts))
         return None
+
+    def has(self, idx: int) -> bool:
+        return idx in self.parts
 
     @property
     def nbytes(self) -> int:
@@ -212,6 +218,15 @@ class MQTTFC:
         # value = {call_id: assembly} — per-sender FIFO delivery means a
         # part for call N+1 proves call N's missing parts were lost
         self._buffers: "OrderedDict[tuple, dict[int, Any]]" = OrderedDict()
+        # at-least-once dedup: highest COMPLETED call_id per (sender,
+        # topic).  call_ids are monotonic per endpoint and delivery is
+        # per-sender FIFO, so one highwater integer detects any broker
+        # redelivery of an already-processed call; duplicate parts inside
+        # a still-assembling call are caught by the assembly itself.
+        # Retained replays are exempt (a re-SUBSCRIBE legitimately
+        # re-delivers the same call; routed deliveries carry retain=0).
+        self._dedup_hw: "OrderedDict[tuple, int]" = OrderedDict()
+        self._dedup_cap = 4096
         will = Message(will_topic, will_payload, qos=1) if will_topic else None
         self.session = broker.connect(client_id, self._on_message, will=will)
         # reusable encode buffer for tensor-bearing bodies: steady-state
@@ -227,6 +242,7 @@ class MQTTFC:
         self.calls_received = 0
         self.parts_received = 0
         self.bytes_received = 0
+        self.duplicate_drops = 0
         self.compress_attempts = 0
         self.compress_wins = 0
 
@@ -352,6 +368,7 @@ class MQTTFC:
             "calls_received": self.calls_received,
             "parts_received": self.parts_received,
             "bytes_received": self.bytes_received,
+            "duplicate_drops": self.duplicate_drops,
             "compress_attempts": self.compress_attempts,
             "compress_wins": self.compress_wins,
             "arena_reuse_hits": self._arena.reuse_hits,
@@ -379,18 +396,30 @@ class MQTTFC:
             total, off = 0, 0
             legacy_frame = True
         chunk = payload[4 + hlen:]
+        fresh = not msg.retain
+        if fresh:
+            hw = self._dedup_hw.get((sender, msg.topic))
+            if hw is not None and call_id <= hw:
+                # broker redelivery of an already-completed call
+                self.duplicate_drops += 1
+                return
         if n_parts == 1:
             body = chunk
         else:
             key = (sender, msg.topic)
             asm = self._assembly_for(key, call_id, total, n_parts,
                                      legacy_frame)
+            if fresh and asm.has(idx):
+                self.duplicate_drops += 1   # duplicate part, call still open
+                return
             body = asm.add(idx, off, chunk)
             if body is None:
                 return
             del self._buffers[key][call_id]
             if not self._buffers[key]:
                 del self._buffers[key]
+        if fresh:
+            self._mark_completed(sender, msg.topic, call_id)
         self.calls_received += 1
         if flags & F_COMPRESSED:
             body = decompress(body, codec)
@@ -405,6 +434,15 @@ class MQTTFC:
             fn(msg.topic, obj)
         else:
             fn(*obj["a"], **obj["k"])
+
+    def _mark_completed(self, sender: str, topic: str, call_id: int) -> None:
+        key = (sender, topic)
+        cur = self._dedup_hw.get(key)
+        if cur is None or call_id > cur:
+            self._dedup_hw[key] = call_id
+        self._dedup_hw.move_to_end(key)
+        while len(self._dedup_hw) > self._dedup_cap:
+            self._dedup_hw.popitem(last=False)
 
     def _dispatch(self, topic: str) -> Optional[Callable]:
         """Handler lookup: exact map hit, then the wildcard trie through a

@@ -5,6 +5,7 @@ the round index and returns client ids best-first.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 from repro.core.stats import ClientStats
@@ -14,8 +15,17 @@ _POLICIES: dict[str, Callable] = {}
 
 def policy(name: str):
     def deco(fn):
-        _POLICIES[name] = fn
-        return fn
+        # Every policy sees the empty cohort (all clients churned out
+        # mid-round); ranking nothing is [] — not a ZeroDivisionError in
+        # round_robin's modulo or an arbitrary per-policy crash.
+        @functools.wraps(fn)
+        def guarded(stats: dict[str, ClientStats], round_idx: int,
+                    *args, **kwargs) -> list[str]:
+            if not stats:
+                return []
+            return fn(stats, round_idx, *args, **kwargs)
+        _POLICIES[name] = guarded
+        return guarded
     return deco
 
 
@@ -106,10 +116,18 @@ def genetic(stats: dict[str, ClientStats], round_idx: int,
             recv = (len(members) + 1) / bw          # serialized inbound
             arrive = max([1.0 / max(stats[m].cpu_speed, 1e-3)
                           for m in members] or [0.0])
-            worst_head = max(worst_head, max(recv, arrive)
-                             + 0.1 * stats[h].rounds_as_aggregator)
-        root_bw = stats[heads[0]].bandwidth_mbps + 1e-3
-        return worst_head + n_agg / root_bw + total
+            head_t = (max(recv, arrive)
+                      + 0.1 * stats[h].rounds_as_aggregator)
+            total += head_t
+            worst_head = max(worst_head, head_t)
+        # Root fan-in: the elected root receives one model per OTHER
+        # head, so a single-head tree pays nothing; the session elects
+        # the best-connected head as root, so that is the one priced.
+        root_bw = max(stats[h].bandwidth_mbps for h in heads) + 1e-3
+        fan_in = (n_agg - 1) / root_bw
+        # mean head load as a mild balance term: among placements with
+        # the same critical path, prefer the one loading heads evenly
+        return worst_head + fan_in + 0.05 * total / n_agg
 
     population = [rng.permutation(n) for _ in range(pop)]
     for _ in range(gens):

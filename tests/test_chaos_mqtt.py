@@ -1,0 +1,204 @@
+"""Chaos wall for the real-MQTT survival path (the network WILL fail).
+
+Three attack surfaces, one invariant — the federation reconverges to the
+bit-identical global it would have computed on a healthy network:
+
+  * broker death mid-round: the mini-broker is killed (socket aborts, no
+    DISCONNECTs — SIGKILL semantics) while a round is training, restarted,
+    and every endpoint must rejoin on its own under bounded backoff, with
+    QoS-1 retransmission replaying whatever the outage swallowed,
+  * a genuine ``SIGKILL`` of a broker *subprocess*, for the avoidance of
+    any in-process shortcuts,
+  * at-least-once duplication: a link that redelivers QoS-1 frames
+    (``dup_p``) must not double-count any contribution — receiver-side
+    dedup drops the replays and the accumulators admit each client once.
+
+Everything is hermetic (ephemeral ports on 127.0.0.1, builtin client).
+Train values are dyadic rationals, so float sums are exact and
+order-independent — bit-identity is a meaningful assertion even when
+reconnects reorder arrivals.
+"""
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Federation
+from repro.api.mini_broker import MiniBroker
+from repro.api.mqtt_transport import PahoTransport
+
+pytestmark = pytest.mark.mqtt
+
+
+def step(cid, g, rnd, dim=4):
+    base = g["w"] if g is not None else np.zeros(dim, np.float32)
+    i = int(cid[1:])
+    return {"w": base + np.float32(i + 1) * np.float32(0.5 + rnd)}, i + 1
+
+
+def survivor_transport(port, **kw):
+    """The deployment-recommended survival config: persistent sessions
+    (which auto-enables reconnect) + fast bounded backoff for tests."""
+    kw.setdefault("backoff_base_s", 0.02)
+    kw.setdefault("backoff_max_s", 0.25)
+    return PahoTransport(port=port, backend="builtin",
+                         clean_session=False, **kw)
+
+
+def run_reference(n_clients=5, rounds=3):
+    """The uninterrupted run every chaos leg must reproduce bit-exactly."""
+    broker = MiniBroker(port=0).start()
+    fed = Federation(transport=survivor_transport(broker.port))
+    clients = [fed.client(f"c{i}") for i in range(n_clients)]
+    s = fed.create_session("s1", model_name="m", rounds=rounds,
+                           participants=clients, strategy="fedavg")
+    s.run(step, initial_params={"w": np.zeros(4, np.float32)})
+    out = np.array(s.global_params()["w"])
+    v = s.global_version()
+    fed.close()
+    broker.stop()
+    return out, v
+
+
+def test_broker_kill_mid_round_reconverges():
+    """Kill the broker while round 2 is training; every endpoint must
+    reconnect under bounded backoff, the round must complete (QoS-1
+    retransmission), and the final global must be bit-identical to the
+    uninterrupted run."""
+    want, want_v = run_reference()
+
+    broker = MiniBroker(port=0).start()
+    t = survivor_transport(broker.port)
+    fed = Federation(transport=t)
+    clients = [fed.client(f"c{i}") for i in range(5)]
+    s = fed.create_session("s1", model_name="m", rounds=3,
+                           participants=clients, strategy="fedavg")
+    killed = []
+
+    def chaos_step(cid, g, rnd):
+        if rnd == 1 and not killed:
+            # first trainer of round 2: the round has started, nothing of
+            # it has hit the wire yet — then the broker dies and comes
+            # back empty (in-memory sessions do not survive a SIGKILL)
+            killed.append(True)
+            broker.kill()
+            broker.start()
+        return step(cid, g, rnd)
+
+    s.run(chaos_step, initial_params={"w": np.zeros(4, np.float32)})
+    assert killed, "chaos hook never fired"
+    st = t.sys_stats()
+    assert st["reconnect_enabled"] is True
+    assert st["connection_drops"] >= 1, "nobody noticed the broker die"
+    assert st["reconnects"] >= st["connection_drops"]
+    assert st["reconnect_failures"] == 0
+    assert s.global_version() == want_v
+    got = np.array(s.global_params()["w"])
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(got, want)
+    fed.close()
+    broker.stop()
+
+
+def _wait_port(port, deadline_s=10.0):
+    deadline = time.monotonic() + deadline_s
+    while time.monotonic() < deadline:
+        try:
+            socket.create_connection(("127.0.0.1", port), timeout=0.2).close()
+            return
+        except OSError:
+            time.sleep(0.02)
+    raise RuntimeError(f"broker on :{port} never came up")
+
+
+def _spawn_broker(port):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.api.mini_broker", "--port", str(port)],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    _wait_port(port)
+    return proc
+
+
+def test_broker_subprocess_sigkill_mid_round_reconverges():
+    """The same invariant against a broker in a separate PROCESS, killed
+    with an actual ``SIGKILL`` — no in-process shortcut can soften this."""
+    want, want_v = run_reference()
+
+    with socket.socket() as probe:                  # pick a free port
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+    proc = _spawn_broker(port)
+    restarted = []
+    try:
+        t = survivor_transport(port)
+        fed = Federation(transport=t)
+        clients = [fed.client(f"c{i}") for i in range(5)]
+        s = fed.create_session("s1", model_name="m", rounds=3,
+                               participants=clients, strategy="fedavg")
+
+        def chaos_step(cid, g, rnd):
+            nonlocal proc
+            if rnd == 1 and not restarted:
+                restarted.append(True)
+                proc.send_signal(signal.SIGKILL)
+                proc.wait(timeout=10)
+                proc = _spawn_broker(port)
+            return step(cid, g, rnd)
+
+        s.run(chaos_step, initial_params={"w": np.zeros(4, np.float32)})
+        assert restarted
+        st = t.sys_stats()
+        assert st["connection_drops"] >= 1 and st["reconnect_failures"] == 0
+        assert s.global_version() == want_v
+        np.testing.assert_array_equal(np.array(s.global_params()["w"]), want)
+        fed.close()
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
+
+
+def test_dup_p_duplicates_deduped_bit_identically():
+    """Acceptance: under a duplicating link every endpoint's receiver-side
+    dedup fires (``duplicate_drops > 0``), each accumulator admits exactly
+    the live cohort, and the final global is bit-identical to the clean
+    run — duplicates change nothing."""
+    def run(dup_p):
+        fed = Federation(metrics=True,
+                         latency=dict(delay_s=0.002, jitter_s=0.004,
+                                      dup_p=dup_p, seed=11))
+        clients = [fed.client(f"c{i}") for i in range(5)]
+        s = fed.create_session("s1", model_name="m", rounds=3,
+                               participants=clients, strategy="fedavg")
+        s.run(step, initial_params={"w": np.zeros(4, np.float32)})
+        out = np.array(s.global_params()["w"])
+        drops = sum(cl.fc.wire_stats()["duplicate_drops"]
+                    for cl in fed.clients.values())
+        drops += fed.coordinator.fc.wire_stats()["duplicate_drops"]
+        dups = sum(link["duplicates"]
+                   for link in fed.transport.sys_stats()["links"].values())
+        flushes = sorted((e["client"], e["cluster"], e["received"])
+                         for e in fed.tracer.events("flush"))
+        fed.close()
+        return out, drops, dups, flushes
+
+    clean, drops0, dups0, flushes0 = run(0.0)
+    dirty, drops1, dups1, flushes1 = run(0.6)
+    assert drops0 == 0 and dups0 == 0
+    assert dups1 > 0, "the link never injected a duplicate"
+    assert drops1 > 0, "duplicates arrived but dedup never fired"
+    # accumulator count == live cohort size: every aggregator flushed with
+    # exactly the same contribution count as in the duplicate-free run —
+    # no flush was triggered early or double-counted by a replayed frame
+    assert flushes1 == flushes0 and flushes0
+    assert all(n > 0 for _, _, n in flushes0)
+    assert clean.dtype == dirty.dtype
+    np.testing.assert_array_equal(clean, dirty)

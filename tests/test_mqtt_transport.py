@@ -265,3 +265,160 @@ def test_wire_stats_and_broker_stats_surface(broker):
     bstats = broker.sys_stats()
     assert bstats["messages_sent"] > 0
     fed.close()
+
+
+# ---------------------------------------------------------------------------
+# survival: reconnect/backoff, session resumption, concurrency
+# ---------------------------------------------------------------------------
+
+def test_builtin_client_threaded_publish_stress(broker):
+    """Packet-id allocation and the ack/inflight tables are shared across
+    publisher threads: hammering one endpoint from many threads must
+    neither collide on packet ids nor lose a single QoS-1 message."""
+    import threading
+    t = PahoTransport(port=broker.port, backend="builtin")
+    got = []
+    t.connect("rx", lambda m: got.append(bytes(m.payload)))
+    t.subscribe("rx", "sdflmq/stress", qos=1)
+    t.connect("tx", lambda m: None)
+    n, workers = 50, 8
+
+    def pump(k):
+        for i in range(n):
+            t.publish("sdflmq/stress", f"{k}:{i:02d}".encode(), qos=1,
+                      sender="tx")
+
+    threads = [threading.Thread(target=pump, args=(k,))
+               for k in range(workers)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert t.settle()
+    want = sorted(f"{k}:{i:02d}".encode()
+                  for k in range(workers) for i in range(n))
+    assert sorted(got) == want
+    assert t.sys_stats()["send_failures"] == 0
+    t.close()
+
+
+def test_builtin_client_reconnects_after_broker_restart(broker):
+    """clean_session=False turns reconnect on ("auto"): after the broker
+    dies and comes back, both endpoints re-dial under bounded backoff, the
+    subscriber re-subscribes on its own (the restarted broker reports no
+    session), and traffic flows again."""
+    import time
+    t = PahoTransport(port=broker.port, backend="builtin",
+                      clean_session=False, backoff_base_s=0.02,
+                      backoff_max_s=0.25)
+    assert t.reconnect_enabled
+    got = []
+    t.connect("rx", lambda m: got.append(bytes(m.payload)))
+    t.subscribe("rx", "sdflmq/surv", qos=1)
+    t.connect("tx", lambda m: None)
+    t.publish("sdflmq/surv", b"before", qos=1, sender="tx")
+    assert t.settle()
+    assert got == [b"before"]
+    broker.kill()
+    broker.start()
+    deadline = time.monotonic() + 10.0
+    while t.reconnects < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    st = t.sys_stats()
+    assert st["connection_drops"] >= 2 and st["reconnects"] >= 2
+    assert st["reconnect_failures"] == 0
+    t.publish("sdflmq/surv", b"after", qos=1, sender="tx")
+    assert t.settle()
+    assert got == [b"before", b"after"]
+    t.close()
+
+
+def test_reconnect_off_by_default_for_clean_sessions(transport):
+    """The default transport (clean sessions) keeps the old semantics:
+    a lost connection stays lost — no resurrection behind the session
+    takeover rule's back."""
+    assert transport.clean_session is True
+    assert transport.reconnect_enabled is False
+
+
+def test_publish_while_broker_down_is_retransmitted(broker):
+    """A QoS-1 publish attempted DURING the outage parks in the in-flight
+    window and replays (DUP) once the broker is back — the at-least-once
+    contract spans the outage."""
+    import time
+    t = PahoTransport(port=broker.port, backend="builtin",
+                      clean_session=False, backoff_base_s=0.02,
+                      backoff_max_s=0.25)
+    got = []
+    t.connect("rx", lambda m: got.append(bytes(m.payload)))
+    t.subscribe("rx", "sdflmq/outage", qos=1)
+    t.connect("tx", lambda m: None)
+    t.settle()
+    broker.kill()
+    time.sleep(0.05)                    # let the reader threads notice
+    t.publish("sdflmq/outage", b"queued-in-window", qos=1, sender="tx")
+    broker.start()
+    deadline = time.monotonic() + 10.0
+    while not got and time.monotonic() < deadline:
+        t.settle(block=False)           # drain whatever has arrived
+        time.sleep(0.01)
+    assert got == [b"queued-in-window"]
+    assert t.sys_stats()["reconnects"] >= 2
+    t.close()
+
+
+def test_minibroker_redelivers_unacked_qos1_with_dup(broker):
+    """Raw-socket persistent session: a PUBLISH the client never PUBACKed
+    is redelivered on resume with the DUP flag and the SAME packet id
+    [MQTT-4.4.0-1], and the CONNACK reports session-present."""
+    def dial(clean):
+        s = socket.create_connection(("127.0.0.1", broker.port), timeout=5)
+        f = s.makefile("rb")
+        flags = 0x02 if clean else 0x00
+        body = (encode_utf8("MQTT") + b"\x04" + bytes((flags,))
+                + b"\x00\x00" + encode_utf8("dur-raw"))
+        s.sendall(packet(1, 0, body))
+        ptype, _, ack = _read_pkt(f)
+        assert ptype == CONNACK and ack[1] == 0
+        return s, f, ack[0] & 0x01
+
+    s, f, present = dial(clean=False)
+    assert present == 0
+    sub = struct.pack(">H", 1) + encode_utf8("raw/dur") + b"\x01"
+    s.sendall(packet(8, 0x02, sub))
+    assert _read_pkt(f)[0] == SUBACK
+    pub = socket.create_connection(("127.0.0.1", broker.port), timeout=5)
+    pf = pub.makefile("rb")
+    pub.sendall(packet(1, 0, encode_utf8("MQTT") + b"\x04\x02\x00\x00"
+                       + encode_utf8("pub-raw")))
+    assert _read_pkt(pf)[0] == CONNACK
+    pub.sendall(publish_packet("raw/dur", b"must-arrive", qos=1, mid=9))
+
+    def parse_pub(flags, body):
+        tlen = int.from_bytes(body[:2], "big")
+        mid = int.from_bytes(body[2 + tlen:4 + tlen], "big")
+        return bool(flags & 0x08), mid, body[4 + tlen:]
+
+    ptype, flags, body = _read_pkt(f)
+    assert ptype == 3
+    dup, mid1, payload = parse_pub(flags, body)
+    assert (dup, payload) == (False, b"must-arrive")
+    s.close()                                   # die without PUBACK
+    s2, f2, present = dial(clean=False)
+    assert present == 1                         # session survived
+    ptype, flags, body = _read_pkt(f2)
+    assert ptype == 3
+    dup, mid2, payload = parse_pub(flags, body)
+    assert dup is True and mid2 == mid1 and payload == b"must-arrive"
+    # acking it settles the redelivery: a THIRD resume is silent
+    s2.sendall(packet(4, 0, mid2.to_bytes(2, "big")))
+    s2.sendall(packet(14, 0))                   # graceful DISCONNECT
+    s2.close()
+    s3, f3, present = dial(clean=False)
+    assert present == 1
+    s3.settimeout(0.3)
+    import pytest as _pytest
+    with _pytest.raises((TimeoutError, socket.timeout)):
+        _read_pkt(f3)
+    s3.close()
+    pub.close()

@@ -72,3 +72,84 @@ def test_unbind_stops_delivery():
     fc.unbind("t/f")
     caller.call("t/f")
     assert got == [1]
+
+
+# ---------------------------------------------------------------------------
+# at-least-once dedup (QoS-1 redelivery protection)
+# ---------------------------------------------------------------------------
+
+class TestDuplicateDedup:
+    def _pair(self):
+        from repro.core.broker import SimBroker
+        from repro.core.mqttfc import MQTTFC
+        t = SimBroker()
+        tx = MQTTFC(t, "tx", compress_threshold=1 << 30)
+        rx = MQTTFC(t, "rx", compress_threshold=1 << 30)
+        return t, tx, rx
+
+    def test_replayed_single_frame_call_dropped(self):
+        t, tx, rx = self._pair()
+        got = []
+        rx.subscribe_raw("x/y", lambda topic, p: got.append(p["a"][0]))
+        frames = []
+        real = t.publish
+        t.publish = lambda *a, **k: (frames.append((a, k)), real(*a, **k))[1]
+        tx.call("x/y", 7)
+        t.publish = real
+        for a, k in frames:                     # verbatim redelivery
+            real(*a, **k)
+        assert len(got) == 1
+        assert rx.wire_stats()["duplicate_drops"] == len(frames)
+        assert rx.wire_stats()["calls_received"] == 1
+
+    def test_duplicate_part_inside_open_assembly_dropped(self):
+        import numpy as np
+        t, tx, rx = self._pair()
+        tx.max_batch_bytes = 256
+        got = []
+        rx.subscribe_raw("x/big", lambda topic, p: got.append(p["a"][0]))
+        frames = []
+        real = t.publish
+        t.publish = lambda *a, **k: (frames.append((a, k)), real(*a, **k))[1]
+        tx.call("x/big", np.arange(256, dtype=np.float32))
+        t.publish = real
+        assert len(frames) > 1
+        assert len(got) == 1
+        # replay only the FIRST part: the call is complete, highwater drops
+        a, k = frames[0]
+        real(*a, **k)
+        assert rx.wire_stats()["duplicate_drops"] == 1
+        assert len(got) == 1
+
+    def test_retained_replay_exempt_from_dedup(self):
+        """Retained frames legitimately re-arrive (replay on every new
+        matching subscribe); the dedup highwater must not eat them."""
+        t, tx, rx = self._pair()
+        got = []
+        tx.call("x/cfg", 41, retain=True)
+        rx.subscribe_raw("x/cfg", lambda topic, p: got.append(p["a"][0]))
+        rx.subscribe_raw("x/+", lambda topic, p: got.append(p["a"][0]))
+        assert got == [41, 41]                  # both filters replayed
+        assert rx.wire_stats()["duplicate_drops"] == 0
+
+    def test_dedup_highwater_bounded(self):
+        t, tx, rx = self._pair()
+        rx._dedup_cap = 8
+        rx.subscribe_raw("x/y", lambda topic, p: None)
+        for i in range(50):
+            tx.call(f"x/y", i)
+        assert len(rx._dedup_hw) <= 8
+
+    def test_fresh_calls_still_flow_after_duplicates(self):
+        t, tx, rx = self._pair()
+        got = []
+        rx.subscribe_raw("x/y", lambda topic, p: got.append(p["a"][0]))
+        frames = []
+        real = t.publish
+        t.publish = lambda *a, **k: (frames.append((a, k)), real(*a, **k))[1]
+        tx.call("x/y", 1)
+        t.publish = real
+        for a, k in frames:
+            real(*a, **k)
+        tx.call("x/y", 2)                       # newer call_id passes
+        assert got == [1, 2]

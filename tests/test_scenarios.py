@@ -279,12 +279,16 @@ def _matrix_events(kind, fed, n):
         return [scenarios.churn(fail_at={1: ["c5"]},
                                 join_at={3: ["c6"]},
                                 straggle_at={2: {"c1": 0.3}})]
+    if kind == "dup_storm":
+        # an at-least-once link: QoS-1 frames genuinely redelivered
+        return [scenarios.flaky_link(f"c{i}", dup_p=0.5, jitter_s=0.01,
+                                     t0=0.5) for i in range(3)]
     raise AssertionError(kind)
 
 
 @pytest.mark.parametrize("strategy", ["fedavg", "trimmed_mean"])
 @pytest.mark.parametrize("kind", ["reorder", "partition_heal",
-                                  "deadline_cut", "churn"])
+                                  "deadline_cut", "churn", "dup_storm"])
 def test_scenario_matrix_completes_with_finite_globals(kind, strategy):
     rounds = 5
     fed_kw = {}
@@ -313,6 +317,13 @@ def test_scenario_matrix_completes_with_finite_globals(kind, strategy):
     if kind == "churn":
         assert "c5" not in session.contributors()
         assert "c6" in session.contributors()
+    if kind == "dup_storm":
+        links = fed.transport.sys_stats()["links"]
+        assert sum(s["duplicates"] for s in links.values()) > 0
+        drops = sum(cl.fc.wire_stats()["duplicate_drops"]
+                    for cl in fed.clients.values())
+        drops += fed.coordinator.fc.wire_stats()["duplicate_drops"]
+        assert drops > 0, "duplicates were delivered but never deduped"
 
 
 def test_scenario_runs_are_deterministic():

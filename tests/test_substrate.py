@@ -239,3 +239,68 @@ def test_genetic_policy_prefers_capable_heads():
     assert "c4" not in ranked[:n_agg]
     # deterministic
     assert ranked == get_policy("genetic")(stats, 0)
+
+
+def test_all_policies_survive_empty_cohort():
+    """Total churn mid-round hands the optimizer an empty stats dict; every
+    policy must rank nothing as [] (round_robin used to ZeroDivisionError
+    on the modulo)."""
+    from repro.core.role_optimizer import get_policy, list_policies
+    for name in list_policies():
+        assert get_policy(name)({}, 3) == [], name
+
+
+def test_genetic_policy_beats_random_placement():
+    """The GA's fitness must actually price the modeled round: across a
+    heterogeneous fleet its chosen heads should model a faster round than
+    the average random permutation."""
+    import numpy as np
+    from repro.core.role_optimizer import get_policy
+    from repro.core.stats import ClientStats
+
+    rng = np.random.default_rng(5)
+    stats = {f"c{i}": ClientStats(f"c{i}",
+                                  bandwidth_mbps=float(rng.uniform(1, 200)),
+                                  cpu_speed=float(rng.uniform(0.2, 4.0)),
+                                  rounds_as_aggregator=int(rng.integers(0, 5)))
+             for i in range(12)}
+    ids = sorted(stats)
+    n_agg = max(1, round(len(ids) * 0.3))
+
+    def modeled_round_s(order):
+        heads = order[:n_agg]
+        rest = order[n_agg:]
+        share = -(-len(rest) // n_agg)
+        worst = 0.0
+        for hi, h in enumerate(heads):
+            members = rest[hi * share:(hi + 1) * share]
+            recv = (len(members) + 1) / (stats[h].bandwidth_mbps + 1e-3)
+            arrive = max([1.0 / max(stats[m].cpu_speed, 1e-3)
+                          for m in members] or [0.0])
+            worst = max(worst, max(recv, arrive))
+        root_bw = max(stats[h].bandwidth_mbps for h in heads) + 1e-3
+        return worst + (n_agg - 1) / root_bw
+
+    ga = modeled_round_s(get_policy("genetic")(stats, 0))
+    randoms = []
+    for _ in range(200):
+        perm = list(rng.permutation(ids))
+        randoms.append(modeled_round_s(perm))
+    assert ga < np.mean(randoms), (ga, np.mean(randoms))
+
+
+def test_genetic_policy_single_head_pays_no_fanin():
+    """A 3-client fleet has one head; the old fitness charged it
+    n_agg/root_bw anyway, skewing rankings toward bandwidth it never
+    uses.  With one head the placement should be driven by the members,
+    not the head's uplink."""
+    from repro.core.role_optimizer import get_policy
+    from repro.core.stats import ClientStats
+    stats = {
+        "c0": ClientStats("c0", bandwidth_mbps=100.0, cpu_speed=3.0),
+        "c1": ClientStats("c1", bandwidth_mbps=100.0, cpu_speed=3.0),
+        "c2": ClientStats("c2", bandwidth_mbps=100.0, cpu_speed=3.0),
+    }
+    ranked = get_policy("genetic")(stats, 1)
+    assert sorted(ranked) == sorted(stats)
+    assert ranked == get_policy("genetic")(stats, 1)    # deterministic

@@ -465,3 +465,104 @@ def test_wire_stats_schema_parity(backend):
     assert r["parts_received"] == s["parts_sent"]
     assert r["bytes_received"] == s["bytes_sent"]
     assert s["arena_reuse_hits"] >= 1               # steady-state encode
+
+
+# ---------------------------------------------------------------------------
+# at-least-once: duplicate redelivery, session resumption, shared subs
+# ---------------------------------------------------------------------------
+
+def test_duplicate_qos1_redelivery_is_deduped(backend):
+    """QoS 1 is at-least-once: a link (or a reconnecting client) may
+    redeliver any PUBLISH verbatim.  The MQTTFC layer must swallow the
+    replay — the application callback fires once, and the endpoint counts
+    the drop."""
+    tx = MQTTFC(backend.transport, "dtx", compress_threshold=1 << 30)
+    rx = MQTTFC(backend.transport, "drx", compress_threshold=1 << 30)
+    got = []
+    rx.subscribe_raw("sdflmq/dup/x", lambda t, p: got.append(p["a"][0]))
+
+    sent: list[tuple] = []
+    real_publish = backend.transport.publish
+
+    def tap(topic, payload, qos=0, retain=False, sender=""):
+        sent.append((topic, bytes(payload), qos, retain, sender))
+        return real_publish(topic, payload, qos=qos, retain=retain,
+                            sender=sender)
+
+    backend.transport.publish = tap
+    try:
+        tx.call("sdflmq/dup/x", np.arange(64, dtype=np.float32))
+        backend.settle()
+    finally:
+        backend.transport.publish = real_publish
+    assert len(got) == 1
+    # the wire redelivers every captured QoS-1 frame, byte-for-byte
+    replayed = 0
+    for topic, payload, qos, retain, sender in sent:
+        if qos >= 1 and not retain:
+            real_publish(topic, payload, qos=qos, retain=retain,
+                         sender=sender)
+            replayed += 1
+    assert replayed >= 1
+    backend.settle()
+    st = rx.wire_stats()
+    assert len(got) == 1                        # callback fired exactly once
+    assert st["calls_received"] == 1
+    assert st["duplicate_drops"] >= replayed
+
+
+def test_persistent_session_resumes_offline_qos1(backend):
+    """clean_session=False: the subscription survives a disconnect, QoS-1
+    traffic routed while offline is queued, and a resume WITHOUT
+    re-subscribing delivers it."""
+    got: list = []
+    backend.transport.connect(
+        "dur", lambda m: got.append(bytes(m.payload)), clean_session=False)
+    backend.transport.subscribe("dur", "sdflmq/resume/+", qos=1)
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.publish("sdflmq/resume/a", b"live", qos=1,
+                              sender="pub")
+    backend.settle()
+    backend.transport.disconnect("dur", graceful=True)
+    backend.settle()
+    backend.transport.publish("sdflmq/resume/a", b"offline", qos=1,
+                              sender="pub")
+    backend.settle()
+    assert got == [b"live"]                     # nothing while offline
+    backend.transport.connect(
+        "dur", lambda m: got.append(bytes(m.payload)), clean_session=False)
+    backend.settle()
+    assert got == [b"live", b"offline"]
+
+
+def test_clean_session_discards_offline_traffic(backend):
+    """The default clean session keeps the old contract: a reconnect comes
+    back empty — no stored subscription, no queued traffic."""
+    got: list = []
+    backend.transport.connect("cln", lambda m: got.append(bytes(m.payload)))
+    backend.transport.subscribe("cln", "sdflmq/cln/+", qos=1)
+    backend.transport.connect("pub", lambda m: None)
+    backend.transport.disconnect("cln", graceful=True)
+    backend.settle()
+    backend.transport.publish("sdflmq/cln/a", b"lost", qos=1, sender="pub")
+    backend.settle()
+    backend.transport.connect("cln", lambda m: got.append(bytes(m.payload)))
+    backend.settle()
+    assert got == []
+
+
+def test_shared_subscription_round_robins_group(backend):
+    """$share/<group>/<filter>: each message goes to exactly ONE member of
+    the group, and a healthy group shares the load evenly."""
+    members: dict[str, list] = {f"w{i}": [] for i in range(3)}
+    for w, box in members.items():
+        backend.transport.connect(
+            w, lambda m, _b=box: _b.append(bytes(m.payload)))
+        backend.transport.subscribe(w, "$share/pool/sdflmq/jobs/+", qos=1)
+    backend.transport.connect("pub", lambda m: None)
+    expect = [f"t{i}".encode() for i in range(6)]
+    for p in expect:
+        backend.transport.publish("sdflmq/jobs/j", p, qos=1, sender="pub")
+    backend.settle()
+    assert sorted(p for box in members.values() for p in box) == expect
+    assert sorted(len(box) for box in members.values()) == [2, 2, 2]
