@@ -189,7 +189,8 @@ class Federation:
                        capacity: Optional[tuple[int, int]] = None,
                        session_time_s: float = 3600.0,
                        waiting_time_s: float = 120.0,
-                       async_mode=None) -> "FederatedSession":
+                       async_mode=None,
+                       defense=None) -> "FederatedSession":
         """First participant creates the session, the rest join.  ``capacity``
         defaults to exactly the participant set (session starts immediately
         once everyone has joined); pass ``(min, max)`` to leave headroom for
@@ -201,6 +202,13 @@ class Federation:
         dict of its fields, or ``True`` for the defaults — the handle is
         then an ``AsyncFederatedSession`` driven by ``run_async`` and
         ``rounds`` becomes the global-version budget.
+
+        ``defense`` switches on the self-defending control plane (heartbeat
+        liveness, update-norm screening, reputation-weighted combines, and
+        reputation-driven role rotation when the federation runs the
+        ``reputation_aware`` role policy): pass a
+        ``repro.core.defense.DefenseConfig``, a dict of its fields, or
+        ``True`` for the defaults.
 
         A client endpoint can hold aggregation *roles* in only one session
         at a time (the RoleArbiter tracks a single assignment, as in the
@@ -224,12 +232,18 @@ class Federation:
         else:
             session = FederatedSession(self, session_id, model_name,
                                        get_strategy(strategy))
+        defense_wire = None
+        if defense:
+            from repro.core.defense import DefenseConfig
+            defense_wire = DefenseConfig.from_wire(defense).to_wire()
+            session._defense = defense_wire
         self.sessions[session_id] = session
         members[0].create_fl_session(
             session_id, model_name, fl_rounds=rounds,
             session_capacity_min=cap_min, session_capacity_max=cap_max,
             session_time_s=session_time_s, waiting_time_s=waiting_time_s,
-            strategy=strategy, async_cfg=async_wire)
+            strategy=strategy, async_cfg=async_wire,
+            defense_cfg=defense_wire)
         session._admit(members[0])
         for m in members[1:]:
             session.join(m, rounds=rounds)
@@ -251,6 +265,7 @@ class FederatedSession:
         self._initial: Optional[Params] = None
         self._seen_version = 0          # dedupe fan-in from many clients
         self._seen_round = -1
+        self._defense: Optional[dict] = None   # defense wire cfg (or None)
 
     # ------------------------------------------------------------------
     # Callbacks
@@ -275,6 +290,8 @@ class FederatedSession:
         if client.client_id in self.participants:
             return
         self.participants[client.client_id] = client
+        if self._defense is not None:
+            self._arm_heartbeat(client)
         # chain, don't clobber: a client may deliver events for several
         # sessions (each hook filters on its own session id)
         prev_g, prev_r = client.on_global_update, client.on_round_start
@@ -291,6 +308,28 @@ class FederatedSession:
 
         client.on_global_update = g_hook
         client.on_round_start = r_hook
+
+    def _arm_heartbeat(self, client: SDFLMQClient) -> None:
+        """Defense: every participant beats the coordinator's liveness
+        endpoint on the shared clock.  The series self-cancels when the
+        client leaves/fails or the session ends — a silently-dead (or
+        deliberately mute) client stops beating and takes reputation
+        penalties from the coordinator's sweep."""
+        period = float(self._defense.get("heartbeat_period_s", 1.0))
+        if period <= 0:
+            return
+        cid = client.client_id
+
+        def beat():
+            if self.state != "running" and self.state != "waiting":
+                return False
+            cl = self.participants.get(cid)
+            if cl is None:
+                return False
+            cl.heartbeat(self.session_id)
+            return True
+
+        self.federation.clock.schedule_periodic(period, beat)
 
     def join(self, client: Union[str, SDFLMQClient], rounds: int = 0,
              preferred_role: Optional[str] = None) -> bool:

@@ -27,9 +27,25 @@ land between deliveries exactly as they would on a real edge network.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.ft.failures import FailurePlan
+
+
+def _amap(fn, *trees):
+    """Elementwise map over parallel params pytrees (dict/list/tuple/leaf)."""
+    t0 = trees[0]
+    if isinstance(t0, dict):
+        return {k: _amap(fn, *(t[k] for t in trees)) for k in t0}
+    if isinstance(t0, (list, tuple)):
+        return type(t0)(_amap(fn, *vals) for vals in zip(*trees))
+    return fn(*trees)
+
+
+def _copy_tree(params):
+    return _amap(lambda v: np.array(v), params)
 
 
 # ---------------------------------------------------------------------------
@@ -66,12 +82,27 @@ class Partition(ScenarioEvent):
             clock.schedule(self.t1, transport.heal, timer=True)
 
 
+def _link_endpoints(spec) -> list:
+    """Normalize a flaky-link spec — one client id, a list of ids, or a list
+    of ``(a, b)`` link pairs (both endpoints degraded) — to client ids."""
+    items = [spec] if isinstance(spec, str) else list(spec)
+    out: list = []
+    for item in items:
+        ids = [item] if isinstance(item, str) else list(item)
+        for cid in ids:
+            if cid not in out:
+                out.append(cid)
+    return out
+
+
 @dataclass
 class FlakyLink(ScenarioEvent):
-    """Degrade one client's link (loss probability ``p``, duplication
-    probability ``dup_p`` for at-least-once redelivery, optional extra
-    delay/jitter) during ``[t0, t1)``; restores the previous model at t1."""
-    client_id: str
+    """Degrade client links (loss probability ``p``, duplication probability
+    ``dup_p`` for at-least-once redelivery, optional extra delay/jitter)
+    during ``[t0, t1)``; restores the previous models at t1.  ``clients``
+    accepts one client id, a list of ids, or ``(a, b)`` link pairs — so one
+    builder can degrade a whole cluster's links."""
+    clients: Union[str, Sequence]
     p: float = 0.0
     delay_s: float = 0.0
     jitter_s: float = 0.0
@@ -82,20 +113,23 @@ class FlakyLink(ScenarioEvent):
     def arm(self, session) -> None:
         transport = session.federation.transport
         clock = session.federation.clock
-        saved: list = []
+        ids = _link_endpoints(self.clients)
+        saved: dict = {}
 
         def degrade():
-            saved.append(transport.links.get(self.client_id))
-            transport.set_link(self.client_id, delay_s=self.delay_s,
-                               jitter_s=self.jitter_s, drop_p=self.p,
-                               dup_p=self.dup_p)
+            for cid in ids:
+                saved[cid] = transport.links.get(cid)
+                transport.set_link(cid, delay_s=self.delay_s,
+                                   jitter_s=self.jitter_s, drop_p=self.p,
+                                   dup_p=self.dup_p)
 
         def restore():
-            prev = saved.pop() if saved else None
-            if prev is None:
-                transport.clear_link(self.client_id)
-            else:
-                transport.links[self.client_id] = prev
+            for cid in ids:
+                prev = saved.pop(cid, None)
+                if prev is None:
+                    transport.clear_link(cid)
+                else:
+                    transport.links[cid] = prev
 
         clock.schedule(self.t0, degrade, timer=True)
         if self.t1 is not None:
@@ -140,6 +174,196 @@ class Churn(ScenarioEvent):
             transport.set_link(cid, delay_s=extra)
 
 
+# ---------------------------------------------------------------------------
+# Adversarial events (malicious clients, not just faulty links)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Attack(ScenarioEvent):
+    """Base for adversarial clients: ``transform_update`` rewrites what an
+    attacker-controlled client publishes for a round.  ``play``/``play_async``
+    wrap the caller's ``train_fn`` so every attack sees (and may replace) the
+    honest update before it hits the wire — deterministic, seeded only by the
+    builder's own parameters, and composable with partitions/churn/flaky
+    links.  Each injection emits an ``attack_injected`` trace through the
+    federation's telemetry (when metrics are on) and bumps ``injected``."""
+    clients: Sequence[str] = ()
+    start_round: int = 0
+    end_round: Optional[int] = None
+    injected: int = field(default=0, init=False)
+
+    kind = "attack"                     # class attr, not a dataclass field
+
+    def _active(self, round_idx: int) -> bool:
+        return (round_idx >= self.start_round
+                and (self.end_round is None or round_idx < self.end_round))
+
+    def targets(self, client_id: str) -> bool:
+        return client_id in self.clients
+
+    def transform_update(self, session, round_idx: int, client_id: str,
+                         params, weight, global_params):
+        """Return ``(params, weight)`` to replace the honest update, or
+        ``None`` to leave it untouched this round."""
+        raise NotImplementedError
+
+    def maybe_transform(self, session, round_idx: int, client_id: str,
+                        params, weight, global_params):
+        if not self._active(round_idx) or not self.targets(client_id):
+            return None
+        out = self.transform_update(session, round_idx, client_id,
+                                    params, weight, global_params)
+        if out is not None:
+            self.injected += 1
+            obs = session.federation.obs
+            if obs is not None:
+                obs.trace("attack_injected", session=session.session_id,
+                          attack=self.kind, client=client_id,
+                          round=round_idx)
+        return out
+
+
+@dataclass
+class LabelFlip(Attack):
+    """Label-flip poisoning: the attacker trains against inverted labels,
+    modeled as publishing the *inverted* update ``g - flip_scale*(p - g)``
+    (it pulls the global exactly opposite to its honest gradient)."""
+    flip_scale: float = 1.0
+
+    kind = "label_flip"
+
+    def transform_update(self, session, round_idx, client_id,
+                         params, weight, global_params):
+        s = self.flip_scale
+        if global_params is None:
+            return _amap(lambda v: np.asarray(
+                -s * np.asarray(v, np.float64), np.asarray(v).dtype),
+                params), weight
+        def flip(v, gv):
+            v = np.asarray(v)
+            g64 = np.asarray(gv, np.float64)
+            return np.asarray(g64 - s * (np.asarray(v, np.float64) - g64),
+                              v.dtype)
+        return _amap(flip, params, global_params), weight
+
+
+@dataclass
+class ScalePoison(Attack):
+    """Model-poisoning by update inflation: publishes ``g + lam*(p - g)`` —
+    the honest delta scaled ×``lam`` (boosted/model-replacement attack)."""
+    lam: float = 10.0
+
+    kind = "scale_poison"
+
+    def transform_update(self, session, round_idx, client_id,
+                         params, weight, global_params):
+        lam = self.lam
+        if global_params is None:
+            return _amap(lambda v: np.asarray(
+                lam * np.asarray(v, np.float64), np.asarray(v).dtype),
+                params), weight
+        def scale(v, gv):
+            v = np.asarray(v)
+            g64 = np.asarray(gv, np.float64)
+            return np.asarray(g64 + lam * (np.asarray(v, np.float64) - g64),
+                              v.dtype)
+        return _amap(scale, params, global_params), weight
+
+
+@dataclass
+class FreeRider(Attack):
+    """Free-riding: contribute nothing while claiming sample weight.
+    ``mode="zero"`` republishes the current global (a zero update);
+    ``mode="replay"`` replays the client's own stale round-0 update forever
+    (first round trains honestly to have something to replay)."""
+    mode: str = "zero"
+    _cache: dict = field(default_factory=dict, init=False)
+
+    kind = "free_rider"
+
+    def transform_update(self, session, round_idx, client_id,
+                         params, weight, global_params):
+        if self.mode == "replay":
+            hit = self._cache.get(client_id)
+            if hit is None:
+                self._cache[client_id] = (_copy_tree(params), weight)
+                return None                 # honest once, stale forever after
+            stale_p, stale_w = hit
+            return _copy_tree(stale_p), stale_w
+        if global_params is None:
+            return _amap(lambda v: np.zeros_like(np.asarray(v)), params), \
+                weight
+        return _copy_tree(global_params), weight
+
+
+@dataclass
+class SybilFlood(Attack):
+    """Sybil join flood: at round ``at_round`` mint ``count`` fresh client
+    identities and push them through the elastic-join path; every admitted
+    sybil then publishes scaled-poison updates (×``lam``).  The flood both
+    stresses admission/rearrangement and hands the robust combines a
+    colluding majority-attempt to reject."""
+    count: int = 3
+    at_round: int = 1
+    lam: float = 5.0
+    prefix: str = "sybil"
+    joined: list = field(default_factory=list, init=False)
+
+    kind = "sybil_flood"
+
+    def targets(self, client_id: str) -> bool:
+        return client_id in self.joined or client_id in self.clients
+
+    def apply_round(self, session, round_idx: int) -> None:
+        if round_idx != self.at_round:
+            return
+        obs = session.federation.obs
+        for i in range(self.count):
+            cid = f"{self.prefix}{i}"
+            if session.join(cid):
+                self.joined.append(cid)
+                self.injected += 1
+                if obs is not None:
+                    obs.trace("attack_injected", session=session.session_id,
+                              attack=self.kind, client=cid, round=round_idx)
+
+    def transform_update(self, session, round_idx, client_id,
+                         params, weight, global_params):
+        lam = self.lam
+        if global_params is None:
+            return _amap(lambda v: np.asarray(
+                lam * np.asarray(v, np.float64), np.asarray(v).dtype),
+                params), weight
+        def scale(v, gv):
+            v = np.asarray(v)
+            g64 = np.asarray(gv, np.float64)
+            return np.asarray(g64 + lam * (np.asarray(v, np.float64) - g64),
+                              v.dtype)
+        return _amap(scale, params, global_params), weight
+
+
+def wrap_attacks(session, train_fn: Callable,
+                 events: Sequence[ScenarioEvent]) -> Callable:
+    """Wrap ``train_fn`` so armed ``Attack`` events rewrite attacker-
+    controlled updates before publish.  Attacks compose in event order
+    (later attacks see earlier attacks' output).  No attacks → the original
+    ``train_fn`` is returned unchanged (bit-identical clean runs)."""
+    attacks = [ev for ev in events if isinstance(ev, Attack)]
+    if not attacks:
+        return train_fn
+
+    def attacked(client_id, global_params, round_idx):
+        params, weight = train_fn(client_id, global_params, round_idx)
+        for atk in attacks:
+            out = atk.maybe_transform(session, round_idx, client_id,
+                                      params, weight, global_params)
+            if out is not None:
+                params, weight = out
+        return params, weight
+
+    return attacked
+
+
 # ---- builders (the declarative surface) -----------------------------------
 
 def partition(groups: Sequence[Sequence[str]], t0: float = 0.0,
@@ -147,10 +371,37 @@ def partition(groups: Sequence[Sequence[str]], t0: float = 0.0,
     return Partition(groups, t0, t1)
 
 
-def flaky_link(client_id: str, p: float = 0.0, delay_s: float = 0.0,
-               jitter_s: float = 0.0, dup_p: float = 0.0, t0: float = 0.0,
+def flaky_link(clients: Union[str, Sequence], p: float = 0.0,
+               delay_s: float = 0.0, jitter_s: float = 0.0,
+               dup_p: float = 0.0, t0: float = 0.0,
                t1: Optional[float] = None) -> FlakyLink:
-    return FlakyLink(client_id, p, delay_s, jitter_s, dup_p, t0, t1)
+    """``clients``: one id, a list of ids, or ``(a, b)`` link pairs."""
+    return FlakyLink(clients, p, delay_s, jitter_s, dup_p, t0, t1)
+
+
+def label_flip(clients: Sequence[str], flip_scale: float = 1.0,
+               start_round: int = 0,
+               end_round: Optional[int] = None) -> LabelFlip:
+    return LabelFlip(list(clients), start_round, end_round, flip_scale)
+
+
+def scale_poison(clients: Sequence[str], lam: float = 10.0,
+                 start_round: int = 0,
+                 end_round: Optional[int] = None) -> ScalePoison:
+    return ScalePoison(list(clients), start_round, end_round, lam)
+
+
+def free_rider(clients: Sequence[str], mode: str = "zero",
+               start_round: int = 0,
+               end_round: Optional[int] = None) -> FreeRider:
+    assert mode in ("zero", "replay"), mode
+    return FreeRider(list(clients), start_round, end_round, mode)
+
+
+def sybil_flood(count: int = 3, at_round: int = 1, lam: float = 5.0,
+                prefix: str = "sybil",
+                end_round: Optional[int] = None) -> SybilFlood:
+    return SybilFlood([], 0, end_round, count, at_round, lam, prefix)
 
 
 def churn(plan: Optional[FailurePlan] = None, *,
@@ -194,6 +445,7 @@ def play_async(session, train_fn: Callable,
     from repro.api.async_fl import AsyncFederatedSession
     assert isinstance(session, AsyncFederatedSession), \
         "play_async drives async sessions; use play() for synchronous ones"
+    train_fn = wrap_attacks(session, train_fn, events)
     return session.run_async(train_fn, target_version=target_version,
                              max_time_s=max_time_s, events=events,
                              initial_params=initial_params)
@@ -214,6 +466,7 @@ def play(session, train_fn: Callable, events: Sequence[ScenarioEvent] = (),
     report = ScenarioReport()
     if initial_params is not None:
         session._initial = initial_params
+    train_fn = wrap_attacks(session, train_fn, events)
     for ev in events:
         ev.arm(session)
     launched = -1

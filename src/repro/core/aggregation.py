@@ -140,6 +140,14 @@ def aggregate_params(params, weights, mesh: Mesh, axis: str,
             # The combine is churn-aware: rows carried with zero weight
             # (dead/vacant mesh slots) are masked out of the robust
             # statistics instead of feeding them stale parameters.
+            # Defense premaps (norm clipping) apply shard-locally BEFORE the
+            # gather — client i owns mesh index i, so the local slice is one
+            # client's contribution, exactly like a leaf on the host path.
+            if ref_leaves:
+                ref_local = jax.tree_util.tree_unflatten(treedef, leaves[n_p:])
+                p_local = strat.premap(p_local, ref_local, jnp)
+            elif type(strat).premap is not AggregationStrategy.premap:
+                p_local = strat.premap(p_local, None, jnp)
             stacked = jax.tree_util.tree_map(
                 lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True),
                 p_local)

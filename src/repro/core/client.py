@@ -306,6 +306,12 @@ class _SessionCtx:
     peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
     stale_dropped: int = 0                   # late contributions discarded
     uplink_err: Optional[Params] = None      # int8 error-feedback residual
+    # -- adversarial defense (core/defense.py; rides the topology) ------
+    defense: Optional[dict] = None           # screening rules (from topology)
+    reputation: dict = field(default_factory=dict)   # coordinator trust map
+    defense_rejected: int = 0                # updates this node rejected
+    gate_ewma: float = 0.0                   # norm-per-weight EWMA baseline
+    gate_n: int = 0                          # observations toward warmup
     # -- asynchronous mode (repro.api.async_fl) ------------------------
     async_cfg: Optional[dict] = None         # admission rules (from topology)
     async_bufs: dict = field(default_factory=dict)   # cluster -> AsyncBuffer
@@ -401,7 +407,8 @@ class SDFLMQClient:
                           waiting_time_s: float = 120.0,
                           preferred_role: Optional[str] = None,
                           strategy: str = "fedavg",
-                          async_cfg: Optional[dict] = None) -> None:
+                          async_cfg: Optional[dict] = None,
+                          defense_cfg: Optional[dict] = None) -> None:
         strat = get_strategy(strategy)           # fail fast on unknown names
         if isinstance(strategy, str):
             strategy = strat.name
@@ -421,7 +428,7 @@ class SDFLMQClient:
                      session_capacity_max, session_time_s, waiting_time_s,
                      preferred_role or self.preferred_role,
                      self.stats.to_dict(), strategy=strategy,
-                     async_cfg=async_cfg)
+                     async_cfg=async_cfg, defense_cfg=defense_cfg)
 
     def join_fl_session(self, session_id: str, model_name: str,
                         fl_rounds: int = 0,
@@ -505,6 +512,10 @@ class SDFLMQClient:
         """Simulate abnormal death -> broker fires the LWT."""
         self.fc.close(graceful=False)
 
+    def heartbeat(self, session_id: str) -> None:
+        """Liveness beat to the coordinator (defense; metadata only)."""
+        self.fc.call(T.coord("heartbeat"), session_id, self.client_id)
+
     def signal_ready(self, session_id: str,
                      stats: Optional[ClientStats] = None,
                      metrics: Optional[dict] = None) -> None:
@@ -553,6 +564,12 @@ class SDFLMQClient:
             ctx.strategy = body.get("strategy", ctx.strategy)
             # async admission rules (incl. live cohort size) ride along too
             ctx.async_cfg = body.get("async") or ctx.async_cfg
+            # defense screening rules + the coordinator's live reputation
+            # map: every aggregator (incl. late joiners) screens the same
+            d = body.get("defense")
+            if d is not None:
+                ctx.defense = d
+                ctx.reputation = dict(d.get("reputation") or {})
             # a (re)joining client syncs its round counter from the retained
             # topology, so its next contribution carries the live round.
             # Async sessions have no round barrier: rearrangements must NOT
@@ -581,6 +598,96 @@ class SDFLMQClient:
     def _premap_is_identity(strat: AggregationStrategy) -> bool:
         return type(strat).premap is AggregationStrategy.premap
 
+    # ------------------------------------------------------------------
+    # Defense screening (core/defense.py rules ride the topology)
+    # ------------------------------------------------------------------
+    def _defense_screen(self, ctx: _SessionCtx, sid: str, body,
+                        w: float) -> Optional[float]:
+        """Screen one inbound contribution under the session's defense
+        rules.  Returns the (reputation-weighted) combine weight, or None
+        when the update is rejected.  Two instruments, coarse to fine:
+        the *norm gate* (an EWMA baseline of update-delta magnitudes;
+        anything ``norm_gate_mult``× above it is rejected and reported to
+        the coordinator) catches scaling/inflation attacks, while the
+        robust combine downstream handles direction-only poisoning the
+        gate cannot see."""
+        d = ctx.defense
+        sender = body.get("sender", "")
+        partial = bool(body.get("partial"))
+        rep = 1.0 if partial else float(ctx.reputation.get(sender, 1.0))
+        if not partial and rep < float(d.get("reject_below", 0.2)):
+            # quarantined sender: refuse outright, no re-report (the
+            # coordinator already knows — that is WHY the score is low)
+            self._reject_update(ctx, sid, sender, "reputation",
+                                report=False)
+            return None
+        mult = float(d.get("norm_gate_mult", 4.0))
+        if mult > 0:
+            metric = self._update_metric(ctx, body)
+            if metric is not None:
+                warm = int(d.get("norm_warmup", 3))
+                alpha = float(d.get("norm_alpha", 0.3))
+                if ctx.gate_n >= warm and ctx.gate_ewma > 0.0 \
+                        and metric > mult * ctx.gate_ewma:
+                    self._reject_update(ctx, sid, sender, "norm_outlier",
+                                        report=True)
+                    return None
+                ctx.gate_n += 1
+                ctx.gate_ewma = metric if ctx.gate_n == 1 else \
+                    (1.0 - alpha) * ctx.gate_ewma + alpha * metric
+        return w * rep
+
+    def _update_metric(self, ctx: _SessionCtx, body) -> Optional[float]:
+        """Magnitude of a contribution as an L2 delta from the last global
+        (raw norm before the first global exists): per-client for leaves,
+        the weighted-mean delta for sum partials, the worst row for stack
+        batches — one comparable scale for everything the gate sees."""
+        g = ctx.global_params
+
+        def delta_norm(params: Params, scale: float = 1.0) -> float:
+            total = 0.0
+            for k, v in params.items():
+                x = np.asarray(v, np.float64) * scale
+                if g is not None and k in g:
+                    x = x - np.asarray(g[k], np.float64)
+                x = x.ravel()
+                total += float(np.dot(x, x))
+            return float(np.sqrt(total))
+
+        try:
+            if "stack" in body:                   # TensorStack batch
+                views = body["stack"].stacked_views()
+                ws = body.get("weights") or []
+                worst = 0.0
+                for i in range(len(ws)):
+                    worst = max(worst, delta_norm(
+                        {k: v[i] for k, v in views.items()}))
+                return worst
+            if "entries" in body:                 # legacy stack partial
+                return max((delta_norm(_as_params(e["params"]))
+                            for e in body["entries"]), default=0.0)
+            params = _as_params(_bundle_or_params(body))
+            if body.get("partial"):
+                # flat-f64 partial sum: normalize by the carried weight so
+                # the metric is the weighted-mean member delta
+                wsum = max(float(body.get("weight", 1.0)), 1e-12)
+                return delta_norm(params, scale=1.0 / wsum)
+            return delta_norm(params)
+        except Exception:
+            return None           # malformed frame: let the accumulators
+                                  # apply their own schema checks
+
+    def _reject_update(self, ctx: _SessionCtx, sid: str, sender: str,
+                       reason: str, report: bool) -> None:
+        ctx.defense_rejected += 1
+        if self.obs is not None:
+            self.obs.trace("update_rejected", session=sid, client=sender,
+                           by=self.client_id, reason=reason,
+                           round=ctx.round_idx)
+        if report and sender:
+            self.fc.call(T.coord("defense_report"), sid, sender, reason,
+                         self.client_id)
+
     def _on_cluster_input(self, topic: str, payload) -> None:
         """Aggregation service: accumulate inputs for one duty under the
         session's strategy — streaming into the preallocated flat
@@ -607,6 +714,16 @@ class SDFLMQClient:
         if a.flushed:        # new aggregation cycle starts on first input
             a.restart()
         w = float(body["weight"])
+        if ctx.defense is not None:
+            w = self._defense_screen(ctx, sid, body, w)
+            if w is None:
+                # the refusal still counts toward this duty's fan-in, so
+                # the honest subset flushes without waiting for an update
+                # that was rejected
+                a.received += 1
+                if a.received >= duty.expected:
+                    self._flush(sid, cluster_id)
+                return
         if strat.reduction == "stack":
             if body.get("partial"):
                 if "stack" in body:       # TensorStack batch (tb wire)
@@ -616,7 +733,13 @@ class SDFLMQClient:
                         a.add_stack_row(_as_params(e["params"]),
                                         float(e["weight"]), duty.expected)
             else:
-                a.add_stack_row(_bundle_or_params(body), w, duty.expected)
+                contrib = _bundle_or_params(body)
+                if not self._premap_is_identity(strat):
+                    # defense premaps (norm clipping) apply per leaf row,
+                    # exactly once — partials forward already-clipped rows
+                    contrib = strat.premap(_as_params(contrib),
+                                           ctx.global_params, np)
+                a.add_stack_row(contrib, w, duty.expected)
         else:
             if body.get("partial"):
                 a.add_sum(_bundle_or_params(body), 1.0)
@@ -687,13 +810,17 @@ class SDFLMQClient:
                 ctx.stale_dropped += 1
                 return
             w = float(body["weight"]) * float(buf.discount(staleness))
+            if ctx.defense is not None:
+                w = self._defense_screen(ctx, sid, body, w)
+                if w is None:
+                    return      # K-of-N: other admissions trigger the flush
             contrib = _bundle_or_params(body)
+            if not self._premap_is_identity(strat):
+                contrib = strat.premap(_as_params(contrib),
+                                       ctx.global_params, np)
             if strat.reduction == "stack":
                 a.add_stack_row(contrib, w, duty.expected)
             else:
-                if not self._premap_is_identity(strat):
-                    contrib = strat.premap(_as_params(contrib),
-                                           ctx.global_params, np)
                 a.add_sum(contrib, w)
             buf.contribs += 1
             buf.note_stamp(stamp)
@@ -773,7 +900,8 @@ class SDFLMQClient:
                 ctx.view_params = glob
                 ctx.site_seq = 0
                 ctx.version_from_gossip = False
-                if strat.needs_ref or strat.stateful:
+                if strat.needs_ref or strat.stateful \
+                        or ctx.defense is not None:
                     ctx.global_params = {k: np.array(v)
                                          for k, v in glob.items()}
                 if new_state is not None:
@@ -934,8 +1062,9 @@ class SDFLMQClient:
                 return
         ctx.params = _as_params(body["params"])
         strat = self._strategy_for(ctx)
-        if strat.needs_ref or strat.stateful:
+        if strat.needs_ref or strat.stateful or ctx.defense is not None:
             # only reference-using strategies pay for a retained global copy
+            # (the defense norm gate also measures deltas against it)
             ctx.global_params = {k: np.array(v) for k, v in ctx.params.items()}
         if "server_state" in body:
             ctx.server_state = body["server_state"]

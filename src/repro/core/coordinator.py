@@ -14,6 +14,7 @@ from typing import Callable, Optional
 
 from repro.core import topics as T
 from repro.core.clustering import ClusterTree, build_tree, validate_tree
+from repro.core.defense import DefenseConfig, ReputationBook
 from repro.core.mqttfc import MQTTFC
 from repro.core.role_optimizer import get_policy
 from repro.core.roles import ClientAssignment
@@ -51,7 +52,11 @@ class Coordinator:
         self.rearrangement_messages = 0     # paper's "negligible cost" claim
         self.arrangement_messages = 0
         self.deadline_cuts = 0              # rounds ended by the deadline
+        self.roles_rotations = 0            # aggregator-set changes (defense)
         self._pending_cut: dict[str, int] = {}   # sid -> round being cut
+        # defense state: per-session reputation books + heartbeat bookkeeping
+        self.books: dict[str, ReputationBook] = {}
+        self._heartbeats: dict[str, dict[str, float]] = {}   # sid -> cid -> t
         # optional telemetry facade (repro.obs.Telemetry); set by
         # Federation(metrics=...).  None = zero-overhead default.
         self.obs = None
@@ -61,6 +66,8 @@ class Coordinator:
         self.fc.bind(T.coord("join_session"), self._join_session)
         self.fc.bind(T.coord("leave_session"), self._leave_session)
         self.fc.bind(T.coord("client_ready"), self._client_ready)
+        self.fc.bind(T.coord("heartbeat"), self._heartbeat)
+        self.fc.bind(T.coord("defense_report"), self._defense_report)
         self.fc.subscribe_raw(f"{T.ROOT}/will/+", self._on_will_raw)
 
     # ------------------------------------------------------------------
@@ -73,7 +80,8 @@ class Coordinator:
                         preferred_role: str = "aggregator",
                         stats: Optional[dict] = None,
                         strategy: str = "fedavg",
-                        async_cfg: Optional[dict] = None) -> None:
+                        async_cfg: Optional[dict] = None,
+                        defense_cfg: Optional[dict] = None) -> None:
         if session_id in self.sessions:
             # paper: first create wins; later requests are dumped
             return
@@ -81,8 +89,13 @@ class Coordinator:
                       capacity_min, capacity_max, session_time_s,
                       waiting_time_s, strategy=strategy,
                       round_deadline_s=self.cfg.round_deadline_s,
-                      async_cfg=dict(async_cfg) if async_cfg else None)
+                      async_cfg=dict(async_cfg) if async_cfg else None,
+                      defense_cfg=dict(defense_cfg) if defense_cfg else None)
         self.sessions[session_id] = s
+        if s.defense_cfg is not None:
+            self.books[session_id] = ReputationBook(
+                DefenseConfig.from_wire(s.defense_cfg))
+            self._heartbeats[session_id] = {}
         if self.clock is not None:
             s.created_at = self.clock.now
             if 0 < waiting_time_s < float("inf"):
@@ -91,6 +104,7 @@ class Coordinator:
                                     timer=True)
         st = ClientStats.from_dict(stats) if stats else ClientStats(creator)
         s.join(creator, st, preferred_role)
+        self._note_alive(session_id, creator)
         self._notify(creator, {"event": "session_created",
                                "session": s.describe()})
         self._maybe_start(session_id)
@@ -105,6 +119,8 @@ class Coordinator:
             return
         st = ClientStats.from_dict(stats) if stats else ClientStats(client_id)
         ok = s.join(client_id, st, preferred_role)
+        if ok:
+            self._note_alive(session_id, client_id)
         self._notify(client_id, {"event": "joined" if ok else "join_rejected",
                                  "session": s.describe()})
         if ok and s.state == SessionState.RUNNING:
@@ -158,6 +174,70 @@ class Coordinator:
         if s is not None and s.state == SessionState.RUNNING \
                 and s.round_idx == round_idx and s.all_ready:
             self._finish_round(session_id)
+
+    # ------------------------------------------------------------------
+    # Defense: heartbeat liveness + outlier reports -> reputation
+    # ------------------------------------------------------------------
+    def _note_alive(self, session_id: str, client_id: str) -> None:
+        hb = self._heartbeats.get(session_id)
+        if hb is not None:
+            hb[client_id] = self.clock.now if self.clock is not None else 0.0
+
+    def _heartbeat(self, session_id: str, client_id: str) -> None:
+        """Per-client liveness beat on the shared clock (metadata only)."""
+        self._note_alive(session_id, client_id)
+
+    def _defense_report(self, session_id: str, client_id: str,
+                        reason: str = "norm_outlier",
+                        reporter: str = "") -> None:
+        """An aggregator rejected ``client_id``'s update.  The coordinator
+        only sees the *metadata* (who, why) — never the tensors — and turns
+        it into a reputation penalty; crossing ``demote_below`` while the
+        client holds aggregator duty triggers an immediate rearrangement
+        (the moving-target demotion)."""
+        book = self.books.get(session_id)
+        s = self.sessions.get(session_id)
+        if book is None or s is None or client_id not in s.contributors:
+            return
+        amount = (book.cfg.stale_penalty if reason == "stale"
+                  else book.cfg.outlier_penalty)
+        score = book.penalize(client_id, amount)
+        if self.obs is not None:
+            self.obs.trace("reputation_penalty", session=session_id,
+                           client=client_id, reason=reason,
+                           score=round(score, 4), reporter=reporter)
+        if book.quarantined(client_id) and s.state == SessionState.RUNNING:
+            asg = self.assignments.get(session_id, {}).get(client_id)
+            if asg is not None and asg.duties:
+                self._arrange(session_id, rearrange=True)  # demote now
+
+    def _arm_liveness(self, session_id: str) -> None:
+        """Periodic heartbeat sweep on the virtual clock: a contributor not
+        heard from for ``liveness_misses`` beats takes a miss penalty per
+        sweep.  Cancels itself when the session ends."""
+        book = self.books.get(session_id)
+        if book is None or self.clock is None:
+            return
+        cfg = book.cfg
+        window = cfg.heartbeat_period_s * cfg.liveness_misses
+
+        def sweep():
+            s = self.sessions.get(session_id)
+            if s is None or s.state == SessionState.TERMINATED:
+                return False
+            if s.state != SessionState.RUNNING:
+                return True
+            now = self.clock.now
+            hb = self._heartbeats.setdefault(session_id, {})
+            for cid in list(s.contributors):
+                if now - hb.get(cid, 0.0) > window:
+                    score = book.penalize(cid, cfg.miss_penalty)
+                    if self.obs is not None:
+                        self.obs.trace("heartbeat_miss", session=session_id,
+                                       client=cid, score=round(score, 4))
+            return True
+
+        self.clock.schedule_periodic(window, sweep)
 
     def _on_will_raw(self, topic: str, payload) -> None:
         """Failure detector: LWT fired for a dead client."""
@@ -227,6 +307,8 @@ class Coordinator:
         s.state = SessionState.CLUSTERING
         self._arrange(session_id, rearrange=False)
         s.state = SessionState.RUNNING
+        if s.defense_cfg is not None:
+            self._arm_liveness(session_id)
         if s.async_cfg is not None:
             # K-of-N mode: no round barrier.  The coordinator only watches
             # the global topic to track minted versions and terminate the
@@ -245,9 +327,13 @@ class Coordinator:
         pol = get_policy(self.cfg.role_policy)
         ranked = pol(s.contributors, s.round_idx)
         # respect stated preferences: aggregator-volunteers first (paper:
-        # clients notify preference; coordinator decides suitability)
-        vols = [c for c in ranked if s.preferred_roles.get(c, "").startswith("agg")
-                or s.preferred_roles.get(c) == "trainer_aggregator"]
+        # clients notify preference; coordinator decides suitability) — but
+        # a quarantined client cannot volunteer its way into head duty
+        book = self.books.get(s.session_id)
+        vols = [c for c in ranked
+                if (s.preferred_roles.get(c, "").startswith("agg")
+                    or s.preferred_roles.get(c) == "trainer_aggregator")
+                and (book is None or not book.quarantined(c))]
         rest = [c for c in ranked if c not in vols]
         return vols + rest if vols else ranked
 
@@ -259,6 +345,11 @@ class Coordinator:
         if not clients:
             s.state = SessionState.TERMINATED
             return
+        book = self.books.get(session_id)
+        if book is not None:
+            # live trust scores ride the stats the policies rank on
+            for cid, st in s.contributors.items():
+                st.reputation = book.score(cid)
         ranked = self._rank_aggregators(s)
         tree = build_tree(session_id, clients, ranked,
                           self.cfg.aggregator_ratio, self.cfg.levels)
@@ -268,6 +359,19 @@ class Coordinator:
         old_assign = self.assignments.get(session_id, {})
         self.trees[session_id] = tree
         self.assignments[session_id] = new_assign
+        if rearrange and old_assign:
+            # moving-target bookkeeping: the aggregator set changing hands
+            # IS a rotation (reputation demotions, policy rotation, churn)
+            old_heads = {c for c, a in old_assign.items() if a.duties}
+            new_heads = {c for c, a in new_assign.items() if a.duties}
+            if old_heads != new_heads:
+                self.roles_rotations += 1
+                if self.obs is not None:
+                    self.obs.trace(
+                        "role_rotated", session=session_id,
+                        round=s.round_idx,
+                        promoted=sorted(new_heads - old_heads),
+                        demoted=sorted(old_heads - new_heads))
         for cid, asg in new_assign.items():
             if rearrange and old_assign.get(cid) is not None \
                     and old_assign[cid].to_dict() == asg.to_dict():
@@ -288,6 +392,12 @@ class Coordinator:
             # admission rules + live cohort size for every async aggregator
             status["async"] = {**s.async_cfg,
                                "cohort": len(s.contributors)}
+        if s.defense_cfg is not None:
+            # screening rules + live reputation map for every aggregator
+            # (retained: late joiners screen with the same scores)
+            status["defense"] = {
+                **s.defense_cfg,
+                "reputation": book.snapshot() if book is not None else {}}
         self.fc.call(T.session_status(session_id), status, retain=True)
         for cid, st in s.contributors.items():
             if cid in new_assign and new_assign[cid].duties:
@@ -307,6 +417,13 @@ class Coordinator:
             self.obs.trace("round_complete", session=session_id,
                            round=s.round_idx,
                            contributors=len(s.contributors))
+        book = self.books.get(session_id)
+        if book is not None:
+            # clean completed round heals reputation slowly (penalties for
+            # fresh misbehavior outweigh the drip, so healing never races
+            # an active attacker back into head duty)
+            for cid in s.ready:
+                book.heal(cid)
         s.next_round()
         if self.on_round_complete:
             self.on_round_complete(session_id, s.round_idx)

@@ -75,6 +75,24 @@ def perf_aware(stats: dict[str, ClientStats], round_idx: int) -> list[str]:
     return sorted(stats, key=lambda c: -score(stats[c]))
 
 
+@policy("reputation_aware")
+def reputation_aware(stats: dict[str, ClientStats], round_idx: int) -> list[str]:
+    """Moving-target defense (fedstellar-style): aggregator duty rotates
+    round-by-round across the *trusted* set (reputation >= 0.5, the
+    coordinator's ``demote_below`` default), so a compromised head cannot
+    own a cluster indefinitely; suspects sort to the back (best reputation
+    first) and only ever rank when no trusted client remains."""
+    def rep(c: str) -> float:
+        return getattr(stats[c], "reputation", 1.0)
+    ids = sorted(stats)
+    trusted = [c for c in ids if rep(c) >= 0.5]
+    suspects = [c for c in ids if rep(c) < 0.5]
+    if not trusted:            # everyone quarantined: degrade gracefully
+        return sorted(ids, key=lambda c: -rep(c))
+    k = round_idx % len(trusted)
+    return trusted[k:] + trusted[:k] + sorted(suspects, key=lambda c: -rep(c))
+
+
 @policy("blackbox")
 def blackbox(stats: dict[str, ClientStats], round_idx: int) -> list[str]:
     """Black-box optimizer stub (paper future work: swarm/GA): hill-climbs

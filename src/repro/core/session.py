@@ -40,6 +40,7 @@ class FLSession:
     round_started_at: float = 0.0      # SimClock stamp of the current round
     round_deadline_s: float = 0.0      # straggler deadline (0 = none)
     async_cfg: Optional[dict] = None   # async admission rules (None = sync)
+    defense_cfg: Optional[dict] = None  # adversarial defense knobs (None = off)
     history: list[dict] = field(default_factory=list)
 
     def join(self, client_id: str, stats: ClientStats,

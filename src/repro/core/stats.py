@@ -21,6 +21,7 @@ class ClientStats:
     last_round_s: float = 0.0       # measured round latency
     rounds_as_aggregator: int = 0
     samples: int = 0                # local dataset size (FedAvg weight)
+    reputation: float = 1.0         # coordinator trust score (defense)
 
     def to_dict(self) -> dict:
         return asdict(self)

@@ -137,6 +137,10 @@ class Telemetry:
                               "gossip_merges", "site_updates"):
                         set_numeric(f"sdflmq_{k}", "Async-FL counter",
                                     getattr(ctx, k, 0), client=cid, session=sid)
+                    set_numeric("sdflmq_defense_rejected_updates",
+                                "Updates this aggregator rejected (defense)",
+                                getattr(ctx, "defense_rejected", 0),
+                                client=cid, session=sid)
 
             # Coordinator control-plane bookkeeping.
             if coord is not None:
@@ -145,9 +149,21 @@ class Telemetry:
                     set_numeric(f"sdflmq_coordinator_{k}",
                                 "Coordinator control-plane counter",
                                 getattr(coord, k, 0))
+                set_numeric("sdflmq_roles_rotations",
+                            "Aggregator-set rotations (moving-target defense)",
+                            getattr(coord, "roles_rotations", 0))
                 for sid, s in coord.sessions.items():
                     set_numeric("sdflmq_coordinator_round",
                                 "Current round index", s.round_idx, session=sid)
+                    # trust scores are exported for every contributor even
+                    # with the defense off (they sit at the default 1.0),
+                    # so dashboards and the CI scrape gate always see the
+                    # series
+                    for cid, st in s.contributors.items():
+                        set_numeric("sdflmq_defense_reputation",
+                                    "Coordinator trust score per client",
+                                    getattr(st, "reputation", 1.0),
+                                    client=cid, session=sid)
 
             # Clock.
             clock = getattr(fed, "clock", None)

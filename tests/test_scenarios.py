@@ -280,9 +280,10 @@ def _matrix_events(kind, fed, n):
                                 join_at={3: ["c6"]},
                                 straggle_at={2: {"c1": 0.3}})]
     if kind == "dup_storm":
-        # an at-least-once link: QoS-1 frames genuinely redelivered
-        return [scenarios.flaky_link(f"c{i}", dup_p=0.5, jitter_s=0.01,
-                                     t0=0.5) for i in range(3)]
+        # an at-least-once link: QoS-1 frames genuinely redelivered, one
+        # list-form event degrading all three links at once
+        return [scenarios.flaky_link(["c0", "c1", "c2"], dup_p=0.5,
+                                     jitter_s=0.01, t0=0.5)]
     raise AssertionError(kind)
 
 
