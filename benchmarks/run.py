@@ -19,12 +19,13 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 from benchmarks import (bench_async, bench_broker, bench_convergence,
-                        bench_kernels, bench_memory, bench_schedules,
-                        bench_topology, bench_wire)
+                        bench_fleet, bench_kernels, bench_memory,
+                        bench_schedules, bench_topology, bench_wire)
 
 SUITES = [
     ("fig7_convergence", bench_convergence),
     ("fig8_topology", bench_topology),
+    ("fleet", bench_fleet),
     ("broker_load", bench_broker),
     ("wire_data_plane", bench_wire),
     ("async_fl", bench_async),

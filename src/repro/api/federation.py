@@ -117,6 +117,7 @@ class Federation:
             clock=self.clock)
         self.param_server = ParameterServer(transport)
         self.clients: dict[str, SDFLMQClient] = {}
+        self.cohorts: dict = {}          # cohort_id -> CohortClient
         self.sessions: dict[str, "FederatedSession"] = {}
         #: opt-in telemetry (repro.obs).  ``metrics`` accepts ``None``/
         #: ``False`` (off — the zero-overhead, bit-identical default),
@@ -182,6 +183,53 @@ class Federation:
             cl.obs = self.obs
             self.clients[client_id] = cl
         return self.clients[client_id]
+
+    def cohort(self, cohort_id: str, member_ids: Iterable[str],
+               stats: Optional[ClientStats] = None,
+               transport: Optional[Transport] = None):
+        """Create (or return) a ``CohortClient`` endpoint fronting
+        ``member_ids`` as logical clients over ONE connection (fleet-scale
+        mode).  ``transport`` attaches the cohort to a different transport
+        than the federation's own — e.g. a per-site broker shard in a
+        multi-broker fabric (``repro.api.fleet``) — as long as it shares
+        the federation's clock."""
+        if cohort_id not in self.cohorts:
+            from repro.core.cohort import CohortClient
+            co = CohortClient(cohort_id, transport or self.transport,
+                              list(member_ids), wire_format=self.wire_format,
+                              stats=stats)
+            co.obs = self.obs
+            self.cohorts[cohort_id] = co
+        return self.cohorts[cohort_id]
+
+    def create_fleet_session(self, session_id: str, model_name: str,
+                             rounds: int, cohorts: Iterable,
+                             strategy: Union[str, AggregationStrategy] = "fedavg",
+                             session_time_s: float = 3600.0,
+                             waiting_time_s: float = 120.0,
+                             initial_params: Optional[Params] = None,
+                             ) -> "FleetSession":
+        """Fleet-scale session over ``CohortClient`` endpoints: each cohort
+        joins all of its fronted members in one RPC; capacity is the total
+        member count, so the session starts once every cohort has joined.
+        ``initial_params`` seeds round 0 (before any global exists)."""
+        cohorts = list(cohorts)
+        assert cohorts, "a fleet session needs at least one cohort"
+        strat = get_strategy(strategy)
+        total = sum(len(co.active) for co in cohorts)
+        session = FleetSession(self, session_id, model_name, strat)
+        if initial_params is not None:
+            session._initial = initial_params
+        self.sessions[session_id] = session
+        for co in cohorts:
+            co.join_fleet_session(session_id, model_name, fl_rounds=rounds,
+                                  capacity_min=total, capacity_max=total,
+                                  session_time_s=session_time_s,
+                                  waiting_time_s=waiting_time_s,
+                                  strategy=strat.name)
+            session._admit_cohort(co)
+        self.deliver()
+        return session
 
     def create_session(self, session_id: str, model_name: str, rounds: int,
                        participants: Iterable[Union[str, SDFLMQClient]],
@@ -473,3 +521,86 @@ class FederatedSession:
             self._seen_round = round_idx
             if self.on_round_start:
                 self.on_round_start(round_idx)
+
+
+class FleetSession(FederatedSession):
+    """Round loop over ``CohortClient`` endpoints (fleet-scale mode).
+
+    The handle keeps the ``FederatedSession`` surface (state/round
+    introspection, ``run``, scenario compatibility: cohorts register in
+    ``participants`` so partitions/flaky links key on cohort ids), but the
+    round loop trains struct-of-arrays parameter banks and publishes
+    through each cohort's batched data plane.  Per-cohort member order is
+    globally sorted, so a single-cohort fleet replays an individual-client
+    federation bit-for-bit (see core/cohort.py).
+    """
+
+    def __init__(self, federation: Federation, session_id: str,
+                 model_name: str, strategy: AggregationStrategy):
+        super().__init__(federation, session_id, model_name, strategy)
+        self.cohorts: dict = {}          # cohort_id -> CohortClient
+
+    def _admit_cohort(self, co) -> None:
+        if co.client_id in self.cohorts:
+            return
+        self.cohorts[co.client_id] = co
+        # scenario events and report plumbing see the cohort endpoint as a
+        # participant (it IS an SDFLMQClient); the overridden round loop
+        # never iterates participants, so the two views don't collide
+        self._admit(co)
+
+    def member_count(self) -> int:
+        return sum(len(co.active) for co in self.cohorts.values())
+
+    def drop_members(self, cohort_id: str, member_ids) -> None:
+        """Member-level churn: fronted logical ids leave mid-run (one
+        batched RPC + one coordinator rearrangement per cohort)."""
+        self.cohorts[cohort_id].drop_members(self.session_id, member_ids)
+        self.federation.deliver()
+
+    def run_round_async(self, train_fn: TrainFn,
+                        stats_fn: Optional[Callable] = None) -> int:
+        """Train every cohort's bank, replay the aggregation schedule, and
+        report readiness — one batched message per cohort.  ``train_fn``
+        keeps the individual-session signature ``(member_id, start_params,
+        round_idx) -> (params, n_samples)``."""
+        rnd = self.round_idx
+        base = self.global_params()
+        if base is None:
+            base = self._initial
+        sid = self.session_id
+        for co_id, co in sorted(self.cohorts.items()):
+            if sid not in co.banks:
+                assert base is not None, "fleet round 0 needs initial_params"
+                co.set_bank(sid, base)
+            co.train_members(sid,
+                             lambda cid, start: train_fn(cid, start, rnd))
+        for co_id, co in sorted(self.cohorts.items()):
+            co.run_local_round(sid)
+        for co_id, co in sorted(self.cohorts.items()):
+            co.signal_ready_all(sid)
+        return rnd
+
+    def run_round_vectorized(self, train_fn: Callable,
+                             stats_fn: Optional[Callable] = None) -> int:
+        """Fleet-scale round: ``train_fn(bank_data, weights, global_params)
+        -> (bank_data, weights)`` updates a cohort's whole struct-of-arrays
+        bank in ONE call (feed it ``fl_step.build_cohort_local_step`` output
+        or plain numpy ufuncs over the leading member axis) — no per-member
+        Python dispatch.  Aggregation/readiness are identical to
+        ``run_round_async``; drain with ``federation.deliver()``."""
+        rnd = self.round_idx
+        base = self.global_params()
+        if base is None:
+            base = self._initial
+        sid = self.session_id
+        for co_id, co in sorted(self.cohorts.items()):
+            if sid not in co.banks:
+                assert base is not None, "fleet round 0 needs initial_params"
+                co.set_bank(sid, base)
+            co.train_vectorized(sid, train_fn)
+        for co_id, co in sorted(self.cohorts.items()):
+            co.run_local_round(sid)
+        for co_id, co in sorted(self.cohorts.items()):
+            co.signal_ready_all(sid)
+        return rnd

@@ -110,7 +110,16 @@ class SimClock:
 
     def __init__(self, now: float = 0.0):
         self.now = float(now)
-        self._heap: list[_Event] = []
+        # Message events live in per-shard heaps (one per broker site in a
+        # fleet fabric; the anonymous ``None`` shard otherwise) and timer
+        # events in their own heap.  The global ``(time, seq)`` order is
+        # reconstructed by popping the minimum head across heaps, so the
+        # split is invisible to callers — but a message-only drain never
+        # touches armed timers (the old single heap popped and re-pushed
+        # every earlier timer on each delivery: O(timers log n) per event),
+        # and each site's backlog stays in its own smaller heap.
+        self._mheaps: dict[Any, list[_Event]] = {None: []}
+        self._theap: list[_Event] = []
         self._seq = itertools.count()
         self._held = 0
         self._draining = False
@@ -147,12 +156,21 @@ class SimClock:
         return progressed
 
     # ---- scheduling ------------------------------------------------------
-    def schedule(self, t: float, fn: Callable, timer: bool = False) -> _Event:
+    def schedule(self, t: float, fn: Callable, timer: bool = False,
+                 shard: Any = None) -> _Event:
         """Schedule ``fn`` to run at virtual time ``t`` (clamped to now).
         ``timer=True`` marks a control-plane alarm: it fires only on
-        explicit time advances, never during a message drain."""
+        explicit time advances, never during a message drain.  ``shard``
+        names the event-loop shard (e.g. a broker site) whose heap the
+        event rides; unknown shards are created on first use."""
         ev = _Event(max(float(t), self.now), next(self._seq), fn, timer)
-        heapq.heappush(self._heap, ev)
+        if timer:
+            heapq.heappush(self._theap, ev)
+        else:
+            h = self._mheaps.get(shard)
+            if h is None:
+                h = self._mheaps[shard] = []
+            heapq.heappush(h, ev)
         return ev
 
     def call_when_idle(self, fn: Callable) -> None:
@@ -190,33 +208,47 @@ class SimClock:
 
     # ---- introspection ---------------------------------------------------
     def pending(self, timers: bool = True) -> int:
-        return sum(1 for e in self._heap if not e.cancelled
-                   and (timers or not e.timer))
+        n = sum(1 for h in self._mheaps.values()
+                for e in h if not e.cancelled)
+        if timers:
+            n += sum(1 for e in self._theap if not e.cancelled)
+        return n
+
+    def shards(self) -> dict:
+        """Live message-event count per event-loop shard (introspection)."""
+        return {k: sum(1 for e in h if not e.cancelled)
+                for k, h in self._mheaps.items() if h}
+
+    @staticmethod
+    def _head(h: list) -> Optional[_Event]:
+        while h and h[0].cancelled:
+            heapq.heappop(h)                 # lazy cleanup: O(1) amortized
+        return h[0] if h else None
 
     def next_event_time(self) -> Optional[float]:
-        while self._heap and self._heap[0].cancelled:
-            heapq.heappop(self._heap)        # lazy cleanup: O(1) amortized
-        return self._heap[0].time if self._heap else None
+        times = [e.time for e in map(self._head, self._mheaps.values()) if e]
+        th = self._head(self._theap)
+        if th is not None:
+            times.append(th.time)
+        return min(times) if times else None
 
     # ---- draining --------------------------------------------------------
     def _pop_due(self, limit: float, timers: bool) -> Optional[_Event]:
-        skipped = []
-        ev = None
-        while self._heap:
-            cand = heapq.heappop(self._heap)
-            if cand.cancelled:
-                continue
-            if cand.time > limit:
-                skipped.append(cand)
-                break
-            if cand.timer and not timers:
-                skipped.append(cand)
-                continue
-            ev = cand
-            break
-        for s in skipped:
-            heapq.heappush(self._heap, s)
-        return ev
+        # pop the globally-earliest due event: scan shard heads (K small),
+        # never touching the timer heap during message-only drains
+        best_h = None
+        best = None
+        for h in self._mheaps.values():
+            e = self._head(h)
+            if e and (best is None or (e.time, e.seq) < (best.time, best.seq)):
+                best, best_h = e, h
+        if timers:
+            e = self._head(self._theap)
+            if e and (best is None or (e.time, e.seq) < (best.time, best.seq)):
+                best, best_h = e, self._theap
+        if best is None or best.time > limit:
+            return None
+        return heapq.heappop(best_h)
 
     def _fire_idle_cbs(self) -> bool:
         if self._idle_cbs and self.pending(timers=False) == 0:
@@ -361,6 +393,9 @@ class LatencyTransport:
                  clock: Optional[SimClock] = None):
         self.inner = inner
         self.default = LinkModel(delay_s, jitter_s, drop_p, dup_p)
+        # event-loop shard this transport's deliveries ride (a fleet fabric
+        # sets one per broker site; None = the clock's anonymous shard)
+        self.shard: Any = None
         self.links: dict[str, LinkModel] = {}
         self.seed = seed
         self._rngs: dict[str, random.Random] = {}
@@ -427,7 +462,8 @@ class LatencyTransport:
         for receiver, msg in held:
             self.clock.schedule(
                 self.clock.now,
-                lambda r=receiver, m=msg: self._deliver_direct(r, m))
+                lambda r=receiver, m=msg: self._deliver_direct(r, m),
+                shard=self.shard)
         if not self.clock.held:
             self.clock.run_until_idle()
 
@@ -500,7 +536,8 @@ class LatencyTransport:
                            bytes=len(payload), arrival=round(arrival, 6))
         self.clock.schedule(
             arrival,
-            lambda: self._deliver(topic, payload, qos, retain, sender))
+            lambda: self._deliver(topic, payload, qos, retain, sender),
+            shard=self.shard)
         if link.dup_p and qos >= 1 and not retain \
                 and rng.random() < link.dup_p:
             # broker at-least-once redelivery: a genuine second copy of the
@@ -512,7 +549,8 @@ class LatencyTransport:
                 + rng.uniform(0.0, link.jitter_s + link.delay_s)
             self.clock.schedule(
                 dup_arrival,
-                lambda: self._deliver(topic, payload, qos, retain, sender))
+                lambda: self._deliver(topic, payload, qos, retain, sender),
+                shard=self.shard)
         if not self.clock.held:
             self.clock.run_until_idle()
         return 0

@@ -329,8 +329,25 @@ class _BridgeLink:
     forwarded: int = 0
     dropped: int = 0
     retransmitted: int = 0
+    # inter-broker partition: while down, QoS>=1 / retained traffic is held
+    # (the bridge's persistent session), QoS 0 is lost — healed bridges
+    # release the backlog in original order
+    down: bool = False
+    held: list = field(default_factory=list)
+
+    def release(self, src: "SimBroker") -> None:
+        self.down = False
+        backlog, self.held = self.held, []
+        for msg in backlog:
+            self.forward(src, msg)
 
     def forward(self, src: "SimBroker", msg: Message) -> None:
+        if self.down:
+            if msg.qos >= 1 or msg.retain:
+                self.held.append(msg)
+            else:
+                self.dropped += 1
+            return
         lat = self.delay_s + (self.rng.uniform(0.0, self.jitter_s)
                               if self.jitter_s else 0.0)
         if self.drop_p and self.rng.random() < self.drop_p:
@@ -341,15 +358,22 @@ class _BridgeLink:
             lat *= 2.0                     # resend once, arriving late
         src.stats.bridge_forwards += 1
         self.forwarded += 1
+        # re-originate per hop: the receiver sees the message as coming from
+        # the broker that forwarded it (not the first broker on the path).
+        # Each receiver then skips only its bridge back toward the sender,
+        # which is loop-free on any TREE fabric (hub-and-spoke, chains —
+        # the multi-broker shapes §III-F describes) of any size.  A cyclic
+        # broker graph (full mesh of >= 3) would duplicate and is not
+        # supported by this scheme.
+        origin = src.name
         if self.clock is not None and lat > 0:
             self.clock.schedule(
                 self.clock.now + lat,
                 lambda: self.other.publish(msg.topic, msg.payload, msg.qos,
-                                           msg.retain,
-                                           _origin=msg.origin_broker))
+                                           msg.retain, _origin=origin))
         else:
             self.other.publish(msg.topic, msg.payload, msg.qos, msg.retain,
-                               _origin=msg.origin_broker)
+                               _origin=origin)
 
 
 class SimBroker:
@@ -583,6 +607,19 @@ class SimBroker:
                                random.Random(
                                    f"{seed}/{other.name}->{self.name}"))
             other._bridges.append(back)
+
+    def set_bridge_down(self, other_name: Optional[str] = None,
+                        down: bool = True) -> None:
+        """Partition (or heal) this broker's bridges toward ``other_name``
+        (all bridges when ``None``).  While down, reliable traffic queues on
+        the bridge; healing replays the backlog in order."""
+        for br in self._bridges:
+            if other_name is not None and br.other.name != other_name:
+                continue
+            if down:
+                br.down = True
+            elif br.down:
+                br.release(self)
 
     # ---- introspection ---------------------------------------------------
     def sys_stats(self) -> dict:

@@ -84,9 +84,12 @@ class _Accumulator:
     __slots__ = ("flat", "scratch", "acc_schema", "src_schema", "_views",
                  "_src_flat_dtype", "rows", "rows_used", "row_schema",
                  "row_nbytes", "row_weights", "weight", "received",
-                 "flushed", "alloc_bytes")
+                 "flushed", "alloc_bytes", "noted_bytes")
 
     def __init__(self):
+        # bytes last folded into the owning _SessionCtx's running total
+        # (survives hard_reset so the delta goes negative on a re-layout)
+        self.noted_bytes = 0
         self.hard_reset()
 
     def hard_reset(self) -> None:
@@ -304,6 +307,7 @@ class _SessionCtx:
     tree: Optional[dict] = None
     terminated: bool = False
     peak_acc_bytes: int = 0                  # memory evaluation (paper §VI)
+    acc_bytes_now: int = 0                   # running total behind the peak
     stale_dropped: int = 0                   # late contributions discarded
     uplink_err: Optional[Params] = None      # int8 error-feedback residual
     # -- adversarial defense (core/defense.py; rides the topology) ------
@@ -330,12 +334,22 @@ class _SessionCtx:
     def acc_for(self, cluster_id: str) -> _Accumulator:
         return self.accs.setdefault(cluster_id, _Accumulator())
 
-    def note_mem(self) -> None:
-        """Incremental peak tracking: O(#duties), not O(#contributions) —
-        accumulators keep their own allocation counters."""
-        now = sum(a.alloc_bytes for a in self.accs.values())
-        if now > self.peak_acc_bytes:
-            self.peak_acc_bytes = now
+    def note_mem(self, acc: Optional[_Accumulator] = None) -> None:
+        """Incremental peak tracking: O(1) per ingest, not O(#duties) — a
+        cohort endpoint heads thousands of clusters, so even one pass over
+        ``accs`` per contribution is quadratic at fleet scale.  Each
+        accumulator remembers the bytes it last reported (``noted_bytes``)
+        and only the delta folds into the running total."""
+        if acc is not None:
+            self.acc_bytes_now += acc.alloc_bytes - acc.noted_bytes
+            acc.noted_bytes = acc.alloc_bytes
+        else:
+            self.acc_bytes_now = 0
+            for a in self.accs.values():
+                a.noted_bytes = a.alloc_bytes
+                self.acc_bytes_now += a.alloc_bytes
+        if self.acc_bytes_now > self.peak_acc_bytes:
+            self.peak_acc_bytes = self.acc_bytes_now
 
     def reset_round(self, round_idx: int) -> None:
         self.round_idx = round_idx
@@ -345,6 +359,7 @@ class _SessionCtx:
         stale = [cid for cid, a in self.accs.items()
                  if a.received == 0 and not a.flushed]
         for cid in stale:
+            self.acc_bytes_now -= self.accs[cid].noted_bytes
             del self.accs[cid]
         for a in self.accs.values():
             a.restart()
@@ -713,6 +728,10 @@ class SDFLMQClient:
         a = ctx.acc_for(cluster_id)
         if a.flushed:        # new aggregation cycle starts on first input
             a.restart()
+        # ``covers``: how many of this cluster's expected members the
+        # message accounts for — 1 for an individual contribution, k for a
+        # cohort's pre-aggregated batch of k fronted members
+        covers = int(body.get("covers", 1))
         w = float(body["weight"])
         if ctx.defense is not None:
             w = self._defense_screen(ctx, sid, body, w)
@@ -720,7 +739,7 @@ class SDFLMQClient:
                 # the refusal still counts toward this duty's fan-in, so
                 # the honest subset flushes without waiting for an update
                 # that was rejected
-                a.received += 1
+                a.received += covers
                 if a.received >= duty.expected:
                     self._flush(sid, cluster_id)
                 return
@@ -750,8 +769,8 @@ class SDFLMQClient:
                                            ctx.global_params, np)
                 a.add_sum(contrib, w)
         a.weight += w
-        a.received += 1
-        ctx.note_mem()
+        a.received += covers
+        ctx.note_mem(a)
         if a.received >= duty.expected:
             self._flush(sid, cluster_id)
 
@@ -827,7 +846,7 @@ class SDFLMQClient:
             ctx.async_admitted += 1
         a.weight += w
         a.received += 1
-        ctx.note_mem()
+        ctx.note_mem(a)
         cohort = max(1, int(acfg.get("cohort", 1)))
         k = min(max(1, int(acfg.get("k", 1))), cohort)
         if duty.parent is None:
@@ -886,7 +905,7 @@ class SDFLMQClient:
                 self.obs.trace("flush", session=session_id,
                                client=self.client_id, cluster=cluster_id,
                                parent=duty.parent, received=a.received)
-            self.fc.call(T.cluster_agg(session_id, duty.parent), payload)
+            self._send_cluster(session_id, duty.parent, payload)
         else:
             glob, new_state = self._finalize_root(ctx, strat, a)
             if buf is not None:
@@ -929,6 +948,13 @@ class SDFLMQClient:
             buf.start_cycle()
         a.restart()
         a.flushed = True
+
+    def _send_cluster(self, session_id: str, cluster_id: str,
+                      payload: dict) -> None:
+        """Deliver a payload to a cluster's aggregation topic.  Seam for
+        ``CohortClient``: when the target cluster's head is fronted by the
+        same endpoint, the broker round-trip is bypassed."""
+        self.fc.call(T.cluster_agg(session_id, cluster_id), payload)
 
     def _finalize_root(self, ctx: _SessionCtx, strat: AggregationStrategy,
                        a: _Accumulator):

@@ -101,7 +101,8 @@ def build_tree(session_id: str, clients: list[str], ranked_aggregators: list[str
     # leaf level: each head anchors its own cluster (a head MUST be a member
     # of the cluster it aggregates — required by both the self-delivering
     # MQTT path and the collective mapping), trainers are spread across them
-    rest = [c for c in clients if c not in heads0]
+    head_set = set(heads0)                  # O(1) lookup at fleet scale
+    rest = [c for c in clients if c not in head_set]
     shares = _chunks(rest, n_mid) if rest else []
     leaf = []
     for i, h in enumerate(heads0):

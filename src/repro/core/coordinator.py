@@ -47,6 +47,14 @@ class Coordinator:
         self.sessions: dict[str, FLSession] = {}
         self.trees: dict[str, ClusterTree] = {}
         self.assignments: dict[str, dict[str, ClientAssignment]] = {}
+        # wire-form assignment cache: avoids re-serializing 100k unchanged
+        # assignments every rearrangement just to diff them
+        self._assign_wire: dict[str, dict[str, dict]] = {}
+        # cohort registry: one CohortClient endpoint fronts many logical
+        # ids over a single connection — control traffic for a fronted id
+        # routes to (and batches on) the cohort's own control topic
+        self.cohort_members: dict[str, set[str]] = {}
+        self._cohort_of: dict[str, str] = {}
         self.failed_clients: set[str] = set()
         self.on_round_complete: Optional[Callable] = None   # hook for driver
         self.rearrangement_messages = 0     # paper's "negligible cost" claim
@@ -66,6 +74,9 @@ class Coordinator:
         self.fc.bind(T.coord("join_session"), self._join_session)
         self.fc.bind(T.coord("leave_session"), self._leave_session)
         self.fc.bind(T.coord("client_ready"), self._client_ready)
+        self.fc.bind(T.coord("cohort_session"), self._cohort_session)
+        self.fc.bind(T.coord("cohort_ready"), self._cohort_ready)
+        self.fc.bind(T.coord("cohort_leave"), self._cohort_leave)
         self.fc.bind(T.coord("heartbeat"), self._heartbeat)
         self.fc.bind(T.coord("defense_report"), self._defense_report)
         self.fc.subscribe_raw(f"{T.ROOT}/will/+", self._on_will_raw)
@@ -174,6 +185,123 @@ class Coordinator:
         if s is not None and s.state == SessionState.RUNNING \
                 and s.round_idx == round_idx and s.all_ready:
             self._finish_round(session_id)
+
+    # ------------------------------------------------------------------
+    # Cohort endpoints: fleet-scale control-plane batching.  One
+    # CohortClient connection fronts N logical ids; joins, readiness, and
+    # leaves arrive as one message per cohort instead of one per device.
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _brief(s: FLSession) -> dict:
+        """describe() without the contributor list — a fleet session's id
+        roster is O(N) and cohorts already know their own members."""
+        return {"session_id": s.session_id, "model_name": s.model_name,
+                "state": s.state.value, "round": s.round_idx,
+                "fl_rounds": s.fl_rounds, "strategy": s.strategy,
+                "async": s.async_cfg,
+                "n_contributors": len(s.contributors)}
+
+    def _cohort_session(self, session_id: str, cohort_id: str,
+                        client_ids: list, model_name: str,
+                        fl_rounds: int = 0, capacity_min: int = 0,
+                        capacity_max: int = 0,
+                        session_time_s: float = 3600.0,
+                        waiting_time_s: float = 120.0,
+                        preferred_role: str = "trainer",
+                        strategy: str = "fedavg",
+                        stats_list: Optional[list] = None) -> None:
+        """Create-or-join with a batch of logical ids.  The first cohort to
+        name a session creates it (capacity from its parameters); every
+        cohort's members join in one RPC.  One ack lands on the cohort's
+        control topic."""
+        ids = [str(c) for c in client_ids]
+        mem = self.cohort_members.setdefault(cohort_id, set())
+        for cid in ids:
+            self._cohort_of[cid] = cohort_id    # route notifies BEFORE acks
+        mem.update(ids)
+        s = self.sessions.get(session_id)
+        if s is None:
+            if not ids:
+                return
+            s = FLSession(session_id, model_name, ids[0], fl_rounds,
+                          capacity_min or len(ids),
+                          capacity_max or len(ids),
+                          session_time_s, waiting_time_s, strategy=strategy,
+                          round_deadline_s=self.cfg.round_deadline_s)
+            self.sessions[session_id] = s
+            if self.clock is not None:
+                s.created_at = self.clock.now
+                if 0 < waiting_time_s < float("inf"):
+                    self.clock.schedule(
+                        self.clock.now + waiting_time_s,
+                        lambda: self.expire_waiting(session_id), timer=True)
+        elif s.model_name != model_name:
+            self._notify(cohort_id, {"event": "join_rejected",
+                                     "session_id": session_id})
+            return
+        accepted, rejected = [], []
+        for i, cid in enumerate(ids):
+            st = (ClientStats.from_dict(stats_list[i])
+                  if stats_list else ClientStats(cid))
+            if s.join(cid, st, preferred_role):
+                accepted.append(cid)
+                self._note_alive(session_id, cid)
+            else:
+                rejected.append(cid)
+        self._notify(cohort_id, {"event": "cohort_joined",
+                                 "cohort_id": cohort_id,
+                                 "accepted": accepted, "rejected": rejected,
+                                 "session": self._brief(s)})
+        if accepted and s.state == SessionState.RUNNING:
+            self._arrange(session_id, rearrange=True)   # one elastic re-plan
+        else:
+            self._maybe_start(session_id)
+
+    def _cohort_ready(self, session_id: str, cohort_id: str,
+                      client_ids: list,
+                      round_idx: Optional[int] = None,
+                      stats_list: Optional[list] = None) -> None:
+        """Batched ``client_ready``: the whole cohort reports in one
+        message; the round barrier is checked once, after the batch."""
+        s = self.sessions.get(session_id)
+        if s is None or s.state != SessionState.RUNNING \
+                or s.async_cfg is not None:
+            return
+        if round_idx is not None and round_idx != s.round_idx:
+            return                           # stale readiness: discard
+        first = not s.ready
+        for i, cid in enumerate(client_ids):
+            st = ClientStats.from_dict(stats_list[i]) if stats_list else None
+            s.mark_ready(cid, st)
+        if first and s.ready:
+            self._arm_deadline(session_id)
+        if s.all_ready:
+            if self.clock is not None:
+                rnd = s.round_idx
+                self.clock.call_when_idle(
+                    lambda: self._finish_settled_round(session_id, rnd))
+            else:
+                self._finish_round(session_id)
+
+    def _cohort_leave(self, session_id: str, cohort_id: str,
+                      client_ids: list) -> None:
+        """Batched leave (member-level churn inside a cohort): one
+        rearrangement for the whole batch."""
+        s = self.sessions.get(session_id)
+        if s is None:
+            return
+        mem = self.cohort_members.get(cohort_id)
+        left = False
+        for cid in client_ids:
+            if cid in s.contributors:
+                s.leave(cid)
+                left = True
+            if mem is not None:
+                mem.discard(cid)
+        if left and s.state == SessionState.RUNNING:
+            self._arrange(session_id, rearrange=True)
+            if s.contributors and s.all_ready:
+                self._finish_round(session_id)
 
     # ------------------------------------------------------------------
     # Defense: heartbeat liveness + outlier reports -> reputation
@@ -334,8 +462,10 @@ class Coordinator:
                 if (s.preferred_roles.get(c, "").startswith("agg")
                     or s.preferred_roles.get(c) == "trainer_aggregator")
                 and (book is None or not book.quarantined(c))]
-        rest = [c for c in ranked if c not in vols]
-        return vols + rest if vols else ranked
+        if not vols:
+            return ranked
+        vset = set(vols)                    # O(1) lookup at fleet scale
+        return vols + [c for c in ranked if c not in vset]
 
     def _arrange(self, session_id: str, rearrange: bool) -> None:
         """(Re)build the cluster tree and send role assignments.  Initial
@@ -357,8 +487,11 @@ class Coordinator:
         assert not errs, errs
         new_assign = tree.assignments()
         old_assign = self.assignments.get(session_id, {})
+        old_wire = self._assign_wire.get(session_id, {})
+        new_wire = {cid: a.to_dict() for cid, a in new_assign.items()}
         self.trees[session_id] = tree
         self.assignments[session_id] = new_assign
+        self._assign_wire[session_id] = new_wire
         if rearrange and old_assign:
             # moving-target bookkeeping: the aggregator set changing hands
             # IS a rotation (reputation demotions, policy rotation, churn)
@@ -372,13 +505,28 @@ class Coordinator:
                         round=s.round_idx,
                         promoted=sorted(new_heads - old_heads),
                         demoted=sorted(old_heads - new_heads))
-        for cid, asg in new_assign.items():
-            if rearrange and old_assign.get(cid) is not None \
-                    and old_assign[cid].to_dict() == asg.to_dict():
+        batches: dict[str, list] = {}       # cohort -> changed assignments
+        for cid, wire in new_wire.items():
+            if rearrange and old_wire.get(cid) == wire:
                 continue  # unchanged: not a single message (paper's point)
-            payload = {"event": "role_assignment", "assignment": asg.to_dict(),
+            co = self._cohort_of.get(cid)
+            if co is not None:
+                batches.setdefault(co, []).append(wire)
+                continue
+            payload = {"event": "role_assignment", "assignment": wire,
                        "round": s.round_idx}
             self._notify(cid, payload)
+            if rearrange:
+                self.rearrangement_messages += 1
+            else:
+                self.arrangement_messages += 1
+        for co, asgs in batches.items():
+            # one batched assignment message per cohort endpoint — the
+            # fronted ids share a connection, so per-device messages would
+            # all ride the same link anyway
+            self.fc.call(T.client_ctrl(co),
+                         {"event": "role_assignment_batch",
+                          "assignments": asgs, "round": s.round_idx})
             if rearrange:
                 self.rearrangement_messages += 1
             else:
@@ -520,6 +668,24 @@ class Coordinator:
                              {"event": "flush", "level": lvl})
 
     def client_failed(self, client_id: str) -> None:
+        members = self.cohort_members.pop(client_id, None)
+        if members:
+            # a cohort endpoint died: every logical id it fronted is gone
+            self.failed_clients.update(members)
+            for m in members:
+                self._cohort_of.pop(m, None)
+            for sid, s in self.sessions.items():
+                hit = [m for m in members if m in s.contributors]
+                if hit and s.state == SessionState.RUNNING:
+                    for m in hit:
+                        s.leave(m)
+                    if s.contributors:
+                        self._arrange(sid, rearrange=True)
+                        if s.all_ready:
+                            self._finish_round(sid)
+                    else:
+                        s.state = SessionState.TERMINATED
+            return
         self.failed_clients.add(client_id)
         for sid, s in self.sessions.items():
             if client_id in s.contributors and s.state == SessionState.RUNNING:
@@ -530,7 +696,10 @@ class Coordinator:
 
     # ------------------------------------------------------------------
     def _notify(self, client_id: str, payload: dict) -> None:
-        self.fc.call(T.client_ctrl(client_id), payload)
+        # control traffic for a cohort-fronted id lands on the cohort's
+        # own control topic (the fronted ids have no connection of their own)
+        self.fc.call(T.client_ctrl(self._cohort_of.get(client_id, client_id)),
+                     payload)
 
     def _broadcast_status(self, session_id: str, payload: dict) -> None:
         self.fc.call(T.session_status(session_id), payload)

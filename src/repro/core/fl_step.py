@@ -139,6 +139,73 @@ def abstract_state(cfg: ArchConfig, mesh: Mesh, opt_name: str):
 # Step builders
 # --------------------------------------------------------------------------
 
+def _make_client_fn(cfg: ArchConfig, opt, local_steps: int):
+    """One client's local training loop (E fused optimizer steps) — the body
+    both the mesh-mapped round step and the host-path cohort step vmap."""
+
+    def local_step(params, opt_state, step, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            model_api.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    def client_fn(params_c, opt_c, step, batch_c):
+        loss = jnp.float32(0.0)
+        for _ in range(local_steps):
+            params_c, opt_c, loss = local_step(params_c, opt_c, step, batch_c)
+            step = step + 1
+        return params_c, opt_c, loss
+
+    return client_fn
+
+
+def init_cohort_state(cfg: ArchConfig, n_cohort: int, key,
+                      total_steps: int = 10000):
+    """Struct-of-arrays bank for a host-path cohort: every parameter leaf
+    gets a leading ``(n_cohort,)`` member axis and the optimizer state is
+    vmapped to match — no mesh, no per-member pytrees."""
+    opt = make_optimizer(cfg, total_steps=total_steps)
+    decls = model_api.param_decls(cfg)
+    if n_cohort > 1:
+        decls = shd.prepend_axis(decls, n_cohort, "clients")
+    params = shd.materialize(decls, key)
+    init = jax.vmap(opt.init) if n_cohort > 1 else opt.init
+    opt_state = jax.jit(init)(params)
+    return {"params": params, "opt": opt_state,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def build_cohort_local_step(cfg: ArchConfig, n_cohort: int,
+                            total_steps: int = 10000,
+                            local_steps: Optional[int] = None):
+    """Host-path cohort data plane: ONE compiled ``jax.vmap`` call trains
+    all ``n_cohort`` members at once (the vectorized analogue of N
+    individual ``Client.train`` calls).  No mesh is required — the member
+    axis is a plain leading batch axis, so this runs on a single host
+    device and feeds the MQTT-side cohort aggregation path.
+
+    Returns ``cohort_local_step(state, batch) -> (state, metrics)`` where
+    every leaf of ``state["params"]``/``state["opt"]`` and ``batch`` is
+    member-stacked (leading dim ``n_cohort``) when ``n_cohort > 1``."""
+    opt = make_optimizer(cfg, total_steps=total_steps)
+    E = local_steps if local_steps is not None else cfg.fl.local_steps
+    client_fn = _make_client_fn(cfg, opt, E)
+    if n_cohort > 1:
+        step_fn = jax.jit(jax.vmap(client_fn, in_axes=(0, 0, None, 0)))
+    else:
+        step_fn = jax.jit(client_fn)
+
+    def cohort_local_step(state, batch):
+        params, opt_state, losses = step_fn(
+            state["params"], state["opt"], state["step"], batch)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + E}
+        return new_state, {"loss": jnp.mean(losses)}
+
+    return cohort_local_step
+
+
 def build_fl_round_step(cfg: ArchConfig, mesh: Mesh, schedule: AggSchedule,
                         total_steps: int = 10000,
                         local_steps: Optional[int] = None,
@@ -161,20 +228,7 @@ def build_fl_round_step(cfg: ArchConfig, mesh: Mesh, schedule: AggSchedule,
     ax = client_axis_for(cfg, mesh)
     E = local_steps if local_steps is not None else cfg.fl.local_steps
     pspecs = param_specs(cfg, mesh)
-
-    def local_step(params, opt_state, step, batch):
-        (loss, parts), grads = jax.value_and_grad(
-            model_api.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
-        updates, opt_state = opt.update(grads, opt_state, params, step)
-        params = apply_updates(params, updates)
-        return params, opt_state, loss
-
-    def client_fn(params_c, opt_c, step, batch_c):
-        loss = jnp.float32(0.0)
-        for _ in range(E):
-            params_c, opt_c, loss = local_step(params_c, opt_c, step, batch_c)
-            step = step + 1
-        return params_c, opt_c, loss
+    client_fn = _make_client_fn(cfg, opt, E)
 
     def fl_round_step(state, batch, weights):
         if n > 1:

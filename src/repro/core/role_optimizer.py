@@ -155,7 +155,9 @@ def genetic(stats: dict[str, ClientStats], round_idx: int,
             a, b = scored[rng.integers(0, max(elite * 2, 2))], \
                 scored[rng.integers(0, max(elite * 2, 2))]
             cut = int(rng.integers(1, n))
-            child = list(a[:cut]) + [g for g in b if g not in a[:cut]]
+            prefix = list(a[:cut])
+            taken = set(prefix)         # O(n) crossover, not O(n^2) scans
+            child = prefix + [g for g in b if g not in taken]
             if rng.random() < 0.3:                  # swap mutation
                 i, j = rng.integers(0, n, 2)
                 child[i], child[j] = child[j], child[i]

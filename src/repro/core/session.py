@@ -77,6 +77,10 @@ class FLSession:
 
     @property
     def all_ready(self) -> bool:
+        # mark_ready keeps ready ⊆ contributors, so a length check short-
+        # circuits the O(n) set build on every non-final readiness ping
+        if len(self.ready) < len(self.contributors):
+            return False
         return self.ready >= set(self.contributors)
 
     def next_round(self) -> None:

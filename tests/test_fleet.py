@@ -1,0 +1,474 @@
+"""Fleet-scale test wall: cohort bit-identity, batched control plane,
+sharded clock + bridged multi-broker fabric, and the ``-m fleet`` matrix
+(churn / partition / straggler / dup-storm at 5k logical clients, 2k-node
+placement, timer-drain regression).
+
+The unmarked tests are tier-1 (fast, exact); the ``fleet``-marked ones run
+thousands of logical clients and live in their own CI job.
+"""
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.api import Federation, LatencyTransport, SimClock
+from repro.api.fleet import build_fabric
+from repro.core.broker import SimBroker
+from repro.core.cohort import CohortClient, ParamBank
+from repro.core.clustering import build_tree, validate_tree
+from repro.core.role_optimizer import get_policy
+from repro.core.stats import StatsSimulator
+
+fleet = pytest.mark.fleet
+
+INIT = {"w": np.arange(8, dtype=np.float32),
+        "b": np.ones((2, 3), np.float32)}
+
+
+def train(cid, start, rnd):
+    """Deterministic per-(member, round) local update with distinct values
+    per member — any aggregation mistake shows up in the global."""
+    v = (int(cid.lstrip("c"), 10) % 97) + 1.0 + 0.1 * rnd
+    out = {k: (np.asarray(a, np.float64) * 0.5 + v).astype(np.float32)
+           for k, a in start.items()}
+    return out, (int(cid.lstrip("c"), 10) % 7) + 1
+
+
+def run_individual(n, strategy="fedavg", rounds=2):
+    fed = Federation()
+    clients = [fed.client(f"c{i:05d}") for i in range(n)]
+    session = fed.create_session("s", "m", rounds=rounds,
+                                 participants=clients, strategy=strategy)
+    return session.run(train, initial_params=INIT)
+
+
+def make_fleet(n, n_cohorts=1, strategy="fedavg", rounds=2, initial=None,
+               **fed_kwargs):
+    fed = Federation(**fed_kwargs)
+    ids = [f"c{i:05d}" for i in range(n)]
+    size = -(-n // n_cohorts)
+    cohorts = [fed.cohort(f"co{k}", ids[i:i + size])
+               for k, i in enumerate(range(0, n, size))]
+    session = fed.create_fleet_session("s", "m", rounds=rounds,
+                                       cohorts=cohorts, strategy=strategy,
+                                       initial_params=initial)
+    return fed, cohorts, session
+
+
+# ---------------------------------------------------------------------------
+# ParamBank
+# ---------------------------------------------------------------------------
+
+class TestParamBank:
+    def test_rows_are_views(self):
+        bank = ParamBank(["b", "a"], INIT)
+        assert bank.ids == ["a", "b"]           # sorted member order
+        row = bank.row("a")
+        row["w"][0] = 42.0                       # zero-copy: mutates the bank
+        assert bank.data["w"][0, 0] == 42.0
+        assert bank.data["w"].flags["C_CONTIGUOUS"]
+
+    def test_set_row_and_weight(self):
+        bank = ParamBank(["a", "b"], INIT)
+        bank.set_row("b", {k: v + 1 for k, v in INIT.items()}, weight=3.0)
+        np.testing.assert_array_equal(bank.row("b")["w"], INIT["w"] + 1)
+        np.testing.assert_array_equal(bank.row("a")["w"], INIT["w"])
+        assert bank.weight("b") == 3.0 and bank.weight("a") == 1.0
+
+    def test_broadcast_and_nbytes(self):
+        bank = ParamBank([f"m{i}" for i in range(10)], INIT)
+        g = {k: v * 2 for k, v in INIT.items()}
+        bank.broadcast(g)
+        for i in range(10):
+            np.testing.assert_array_equal(bank.data["b"][i], g["b"])
+        # struct-of-arrays: memory is N x template + N weights, no overhead
+        per = sum(np.asarray(v).nbytes for v in INIT.values())
+        assert bank.nbytes == 10 * per + bank.weights.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: one cohort replays N individual clients exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["fedavg", "fedprox", "trimmed_mean"])
+@pytest.mark.parametrize("n", [1, 7, 64])
+def test_single_cohort_bit_identical_to_individuals(strategy, n):
+    ga = run_individual(n, strategy)
+    fed, (co,), session = make_fleet(n, 1, strategy)
+    gb = session.run(train, initial_params=INIT)
+    assert len(ga) == len(gb) == 2
+    for r, (a, b) in enumerate(zip(ga, gb)):
+        for k in a:
+            assert a[k].dtype == b[k].dtype
+            np.testing.assert_array_equal(
+                a[k], b[k],
+                err_msg=f"{strategy} n={n} round {r} key {k} not bit-equal")
+    assert co.bypassed_messages > 0          # the fast path actually ran
+    assert co.uplink_partials == 0           # one cohort: no remote heads
+
+
+def test_multi_cohort_matches_to_tolerance():
+    """Cross-cohort covers=k partials change the f64 association order, so
+    several cohorts agree to float tolerance (not bitwise) — and the
+    batched uplink path must actually be exercised."""
+    ga = run_individual(24)
+    fed, cohorts, session = make_fleet(24, 3)
+    gb = session.run(train, initial_params=INIT)
+    for a, b in zip(ga, gb):
+        for k in a:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6, atol=1e-6)
+    assert sum(co.uplink_partials for co in cohorts) > 0
+
+
+def test_vectorized_round_equals_member_loop():
+    """``run_round_vectorized`` (one call per cohort over the whole bank)
+    lands the same global as per-member ``train_members`` with the
+    equivalent scalar function."""
+    def vtrain(data, weights, g):
+        for k in data:
+            d = np.arange(data[k].shape[0], dtype=np.float64)
+            data[k] = (data[k] * 0.5
+                       + d.reshape((-1,) + (1,) * (data[k].ndim - 1))
+                       ).astype(np.float32)
+        return data, weights
+
+    def strain(cid, start, rnd):
+        # member index == bank row index (ids are sorted on creation)
+        i = int(cid.lstrip("c"), 10)
+        return ({k: (np.asarray(v, np.float64) * 0.5 + i).astype(np.float32)
+                 for k, v in start.items()}, 1)
+
+    fed_a, _, sess_a = make_fleet(9, 1, initial=INIT)
+    sess_a.run_round(strain)
+    fed_b, _, sess_b = make_fleet(9, 1, initial=INIT)
+    sess_b.run_round_vectorized(vtrain)
+    fed_b.deliver()
+    for k in INIT:
+        np.testing.assert_array_equal(sess_a.global_params()[k],
+                                      sess_b.global_params()[k])
+
+
+def test_compiled_cohort_step_matches_per_client_loop():
+    """The vmapped host-path data plane: ONE ``build_cohort_local_step``
+    call over the member-stacked state matches running the n=1 builder on
+    each member's slice (the compiled analogue of N individual clients)."""
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import ShapeConfig, get_arch, smoke_config
+    from repro.core.fl_step import build_cohort_local_step, init_cohort_state
+    from repro.models import inputs as minputs
+
+    tmap = jax.tree_util.tree_map
+    cfg = smoke_config(get_arch("hymba-1.5b"))
+    n = 4
+    key = jax.random.PRNGKey(0)
+    state = init_cohort_state(cfg, n, key)
+    batch = minputs.make_batch(cfg, ShapeConfig("t", 16, 8, "train"), key,
+                               clients=n)
+    new_state, metrics = build_cohort_local_step(cfg, n)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+    step1 = build_cohort_local_step(cfg, 1)
+    for i in range(n):
+        s_i = {"params": tmap(lambda a: a[i], state["params"]),
+               "opt": tmap(lambda a: a[i], state["opt"]),
+               "step": state["step"]}
+        out_i, _ = step1(s_i, tmap(lambda a: a[i], batch))
+        for got, want in zip(jax.tree_util.tree_leaves(new_state["params"]),
+                             jax.tree_util.tree_leaves(out_i["params"])):
+            np.testing.assert_allclose(
+                np.asarray(got[i], np.float32), np.asarray(want, np.float32),
+                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched control plane
+# ---------------------------------------------------------------------------
+
+class TestCohortControlPlane:
+    def test_one_join_rpc_for_all_members(self):
+        fed = Federation()
+        co = fed.cohort("co0", [f"c{i:05d}" for i in range(50)])
+        before = fed.transport.inner.sys_stats()["messages_received"]
+        session = fed.create_fleet_session("s", "m", rounds=1, cohorts=[co])
+        after = fed.transport.inner.sys_stats()["messages_received"]
+        assert session.state == "running"
+        assert sorted(co.joined["s"]) == sorted(co.active)
+        assert len(session.contributors()) == 50
+        # join + topology + batched assignments + global subscriptions:
+        # O(1) broker messages, not O(members)
+        assert after - before < 25, after - before
+
+    def test_drop_members_shrinks_session(self):
+        fed, (co,), session = make_fleet(12, 1, rounds=3, initial=INIT)
+        session.run_round(train)
+        gone = sorted(co.active)[:5]
+        session.drop_members("co0", gone)
+        assert len(session.contributors()) == 7
+        assert session.member_count() == 7
+        g = session.run_round(train)
+        assert g is not None and session.global_version() == 2
+
+    def test_cohort_rejects_individual_training_surface(self):
+        fed, (co,), session = make_fleet(3, 1)
+        with pytest.raises(RuntimeError):
+            co.send_local("s")
+
+    def test_cohort_rejects_async_sessions(self):
+        fed = Federation()
+        co = fed.cohort("co0", ["c0", "c1"])
+        ctx = co.models.ensure("sx", "m")
+        ctx.async_cfg = {"k": 1}
+        co.banks["sx"] = ParamBank(sorted(co.active), INIT)
+        with pytest.raises(RuntimeError):
+            co.run_local_round("sx")
+
+
+# ---------------------------------------------------------------------------
+# Sharded clock
+# ---------------------------------------------------------------------------
+
+class TestShardedClock:
+    def test_cross_shard_global_order(self):
+        c, out = SimClock(), []
+        c.schedule(2.0, lambda: out.append("a2"), shard="a")
+        c.schedule(1.0, lambda: out.append("b1"), shard="b")
+        c.schedule(1.5, lambda: out.append("c15"), shard="c")
+        c.schedule(0.5, lambda: out.append("a05"), shard="a")
+        c.run_until_idle()
+        assert out == ["a05", "b1", "c15", "a2"]
+
+    def test_same_time_fifo_across_shards(self):
+        c, out = SimClock(), []
+        for i, shard in enumerate(["a", "b", "a", None, "b"]):
+            c.schedule(1.0, lambda i=i: out.append(i), shard=shard)
+        c.run_until_idle()
+        assert out == [0, 1, 2, 3, 4]
+
+    def test_shards_introspection(self):
+        c = SimClock()
+        c.schedule(1.0, lambda: None, shard="site0")
+        c.schedule(1.0, lambda: None, shard="site0")
+        c.schedule(1.0, lambda: None)
+        assert c.shards() == {None: 1, "site0": 2}
+        assert c.pending(timers=False) == 3
+
+    def test_timer_drain_cost_flat_in_pending_timers(self):
+        """Satellite regression: a message-only drain must not touch the
+        timer heap.  The old single-heap clock popped and re-pushed every
+        earlier timer per delivery — O(timers log n) per message, ~50x
+        with 10k armed timers.  The split heaps keep the ratio ~1."""
+        def drain_cost(timers, n_msgs=3000):
+            clock = SimClock()
+            for i in range(timers):
+                clock.schedule_periodic(10_000.0 + i, lambda: True)
+            lt = LatencyTransport(SimBroker(), delay_s=0.001, clock=clock)
+            sink = [0]
+            lt.connect("rx", lambda m: sink.__setitem__(0, sink[0] + 1))
+            lt.subscribe("rx", "t/#")
+            with clock.hold():
+                for i in range(n_msgs):
+                    lt.publish("t/a", b"x", sender=f"s{i % 16}")
+                t0 = time.perf_counter()
+                clock.run_until_idle()
+                dt = time.perf_counter() - t0
+            assert sink[0] == n_msgs
+            assert clock.pending(timers=True) == timers  # still armed
+            return dt / n_msgs
+
+        drain_cost(0)                                    # warmup
+        cold = min(drain_cost(0) for _ in range(3))
+        hot = min(drain_cost(10_000) for _ in range(3))
+        assert hot / cold < 5.0, (hot, cold)
+
+
+# ---------------------------------------------------------------------------
+# Bridged multi-broker fabric
+# ---------------------------------------------------------------------------
+
+class TestBridgedFabric:
+    def _mesh(self, n):
+        """Hub-and-spoke: site brokers bridged to one core."""
+        core = SimBroker("core")
+        sites = [SimBroker(f"s{i}") for i in range(n)]
+        for s in sites:
+            core.bridge(s)
+        return core, sites
+
+    def test_hub_and_spoke_no_duplicates(self):
+        core, (s0, s1, s2) = self._mesh(3)
+        got = []
+        s2.connect("rx", lambda m: got.append(m.payload))
+        s2.subscribe("rx", "t/#")
+        s0.publish("t/x", b"one")            # s0 -> core -> {s1, s2}
+        assert got == [b"one"]               # exactly once, two hops
+
+    def test_chain_forwarding(self):
+        a, b, c = SimBroker("a"), SimBroker("b"), SimBroker("c")
+        a.bridge(b)
+        b.bridge(c)
+        got = []
+        c.connect("rx", lambda m: got.append(m.payload))
+        c.subscribe("rx", "t/#")
+        a.publish("t/x", b"far")
+        assert got == [b"far"]
+
+    def test_bridge_partition_holds_and_replays_in_order(self):
+        a, b = SimBroker("a"), SimBroker("b")
+        a.bridge(b)
+        got = []
+        b.connect("rx", lambda m: got.append((m.payload, m.qos)))
+        b.subscribe("rx", "t/#", qos=1)
+        a.set_bridge_down("b")
+        a.publish("t/1", b"q1-first", qos=1)
+        a.publish("t/2", b"q0-lost", qos=0)      # dropped: real outage
+        a.publish("t/3", b"q1-second", qos=1)
+        assert got == []
+        a.set_bridge_down("b", down=False)
+        assert got == [(b"q1-first", 1), (b"q1-second", 1)]
+
+    def test_fabric_session_matches_single_broker(self):
+        ga = run_individual(12)
+        fab = build_fabric(n_sites=2)
+        ids = [f"c{i:05d}" for i in range(12)]
+        cohorts = [fab.cohort("site0", "co0", ids[:6]),
+                   fab.cohort("site1", "co1", ids[6:])]
+        session = fab.create_fleet_session("s", "m", rounds=2,
+                                           cohorts=cohorts)
+        gb = session.run(train, initial_params=INIT)
+        assert len(gb) == 2
+        for a, b in zip(ga, gb):
+            for k in a:
+                np.testing.assert_allclose(a[k], b[k], rtol=1e-6, atol=1e-6)
+
+    def test_partition_site_stalls_round_heal_completes(self):
+        fab = build_fabric(n_sites=2)
+        ids = [f"c{i:05d}" for i in range(8)]
+        cohorts = [fab.cohort("site0", "co0", ids[:4]),
+                   fab.cohort("site1", "co1", ids[4:])]
+        session = fab.create_fleet_session("s", "m", rounds=2,
+                                           cohorts=cohorts,
+                                           initial_params=INIT)
+        session.run_round(train)
+        assert session.global_version() == 1
+        fab.partition_site("site1")
+        session.run_round(train)
+        assert session.global_version() == 1     # stalled on site1's uplink
+        fab.heal_site("site1")                   # backlog replays in order
+        assert session.global_version() == 2
+
+
+# ---------------------------------------------------------------------------
+# Fleet matrix (-m fleet): 5k logical clients under adverse conditions
+# ---------------------------------------------------------------------------
+
+N_FLEET = 5000
+MEM_GATE_KB_PER_1K = 12_000      # measured ~5.7MB/1k; x2 headroom
+
+
+def _vtrain(data, weights, g):
+    for arr in data.values():
+        d = (np.arange(arr.shape[0], dtype=np.float64) % 101) / 101.0
+        np.multiply(arr, 0.9, out=arr)
+        arr += d.reshape((-1,) + (1,) * (arr.ndim - 1))
+    return data, weights
+
+
+def _run_matrix(inject=None, n=N_FLEET, rounds=3):
+    """One fleet run, ``inject(fed, cohorts, session, round_idx)`` fired
+    before each round.  Returns (final_global, session, peak_bytes)."""
+    tracemalloc.start()
+    fed, cohorts, session = make_fleet(n, 2, rounds=rounds,
+                                       initial={"w": np.zeros(32, np.float32)})
+    for r in range(rounds):
+        if inject:
+            inject(fed, cohorts, session, r)
+        session.run_round_vectorized(_vtrain)
+        fed.deliver()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    g = session.global_params()
+    assert g is not None
+    return g, session, peak
+
+
+def _assert_gates(session, peak, n=N_FLEET, rounds=3):
+    assert session.global_version() == rounds
+    assert peak / 1024 / (n / 1000) < MEM_GATE_KB_PER_1K, peak
+
+
+@fleet
+class TestFleetMatrix:
+    def test_clean_run_deterministic_across_reruns(self):
+        g1, s1, peak = _run_matrix()
+        g2, s2, _ = _run_matrix()
+        _assert_gates(s1, peak)
+        assert g1["w"].tobytes() == g2["w"].tobytes()
+
+    def test_churn_5k(self):
+        def inject(fed, cohorts, session, r):
+            if r == 1:       # 10% of one cohort leaves between rounds
+                session.drop_members(
+                    cohorts[0].client_id,
+                    sorted(cohorts[0].active)[:N_FLEET // 20])
+        g1, s1, peak = _run_matrix(inject)
+        _assert_gates(s1, peak)
+        assert s1.member_count() == N_FLEET - N_FLEET // 20
+        g2, s2, _ = _run_matrix(inject)
+        assert g1["w"].tobytes() == g2["w"].tobytes()
+
+    def test_partition_heal_5k(self):
+        fed, cohorts, session = make_fleet(
+            N_FLEET, 2, rounds=3, initial={"w": np.zeros(32, np.float32)})
+        session.run_round_vectorized(_vtrain)
+        fed.deliver()
+        assert session.global_version() == 1
+        other = [co.client_id for co in cohorts[1:]]
+        fed.transport.partition([cohorts[0].client_id],
+                                other + ["coordinator", "param_server"])
+        session.run_round_vectorized(_vtrain)
+        fed.deliver()
+        assert session.global_version() == 1     # stalled on the cut
+        fed.transport.heal()
+        assert session.global_version() == 2     # held uplinks replayed
+
+    def test_straggler_5k(self):
+        fed, cohorts, session = make_fleet(
+            N_FLEET, 2, rounds=3, initial={"w": np.zeros(32, np.float32)})
+        fed.transport.set_link(cohorts[0].client_id, delay_s=5.0)
+        for _ in range(3):
+            session.run_round_vectorized(_vtrain)
+            fed.deliver()
+        assert session.global_version() == 3
+        assert fed.clock.now >= 5.0              # waited for the straggler
+
+    def test_dup_storm_5k(self):
+        """QoS 1 duplicate storm on one cohort's uplink: receiver-side
+        dedup keeps the global identical to the clean run."""
+        g_clean, _, _ = _run_matrix()
+
+        def inject(fed, cohorts, session, r):
+            if r == 0:
+                fed.transport.set_link(cohorts[0].client_id, dup_p=0.7)
+        g_dup, s, peak = _run_matrix(inject)
+        _assert_gates(s, peak)
+        assert g_clean["w"].tobytes() == g_dup["w"].tobytes()
+
+
+@fleet
+@pytest.mark.parametrize("policy", ["round_robin", "genetic",
+                                    "reputation_aware"])
+def test_placement_2k_terminates_fast_with_valid_heads(policy):
+    n = 2000
+    ids = [f"c{i:05d}" for i in range(n)]
+    sim = StatsSimulator(ids)
+    stats = {c: sim.sample(c, 0) for c in ids}
+    t0 = time.perf_counter()
+    ranked = get_policy(policy)(stats, round_idx=3)
+    tree = build_tree("s", ids, ranked, aggregator_ratio=0.3, levels=3)
+    dt = time.perf_counter() - t0
+    assert dt < 5.0, f"{policy} took {dt:.1f}s"
+    assert sorted(ranked) == ids                 # a permutation: no dupes
+    assert validate_tree(tree, ids) == []
+    heads = {c.head for c in tree.all_clusters()}
+    assert heads <= set(ids)
