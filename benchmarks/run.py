@@ -19,8 +19,9 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 from benchmarks import (bench_async, bench_broker, bench_convergence,
-                        bench_fleet, bench_kernels, bench_memory,
-                        bench_schedules, bench_topology, bench_wire)
+                        bench_edge_lm, bench_fleet, bench_kernels,
+                        bench_memory, bench_schedules, bench_topology,
+                        bench_wire)
 
 SUITES = [
     ("fig7_convergence", bench_convergence),
@@ -32,6 +33,7 @@ SUITES = [
     ("aggregator_memory", bench_memory),
     ("kernels", bench_kernels),
     ("schedules", bench_schedules),
+    ("edge_lm", bench_edge_lm),
 ]
 
 

@@ -11,17 +11,9 @@ Scale knobs: --full uses the real qwen2-7b config (needs a TPU pod);
 --model-dim/--layers size the reduced model (~100M params with
 --model-dim 512 --layers 12, still CPU-runnable for a few hundred rounds).
 """
+import argparse
 import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-import argparse                      # noqa: E402
-import tempfile                      # noqa: E402
-
-from repro.configs.base import get_arch, smoke_config  # noqa: E402
-from repro.ft.failures import FailurePlan               # noqa: E402
-from repro.launch.mesh import make_host_mesh            # noqa: E402
-from repro.launch.train import SDFLMQTrainer            # noqa: E402
+import tempfile
 
 
 def main():
@@ -35,8 +27,22 @@ def main():
     ap.add_argument("--strategy", default="fedavg",
                     help="aggregation strategy: fedavg | fedprox | "
                          "trimmed_mean | coordinate_median")
+    ap.add_argument("--update-filter", default=None,
+                    help="partial-update glob spec, e.g. '*/lora_A,*/lora_B'")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    # Size the host platform to the mesh before jax initialises: data=clients
+    # and as many model shards as fit in an 8-ish device budget.
+    model = max(1, 8 // args.clients)
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.clients * model}")
+
+    from repro.configs.base import get_arch, smoke_config
+    from repro.ft.failures import FailurePlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import SDFLMQTrainer
 
     cfg = get_arch("qwen2-7b")
     if not args.full:
@@ -45,12 +51,13 @@ def main():
             cfg = cfg.replace(d_model=args.model_dim, head_dim=args.model_dim // 4)
         if args.layers:
             cfg = cfg.replace(n_layers=args.layers)
-    mesh = make_host_mesh(data=args.clients, model=8 // args.clients or 1)
+    mesh = make_host_mesh(data=args.clients, model=model)
     ckpt = tempfile.mkdtemp(prefix="fedlm_ckpt_")
     plan = FailurePlan(fail_at={args.rounds // 2: [f"c{args.clients - 1}"]})
     tr = SDFLMQTrainer(cfg, mesh, args.clients, args.rounds,
                        args.batch_per_client, args.seq, ckpt_dir=ckpt,
-                       failure_plan=plan, strategy=args.strategy)
+                       failure_plan=plan, strategy=args.strategy,
+                       update_filter=args.update_filter)
     print(f"clients={args.clients} rounds={args.rounds} "
           f"strategy={args.strategy} ckpt={ckpt}")
     for m in tr.run():

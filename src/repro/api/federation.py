@@ -83,13 +83,29 @@ class Federation:
                  coordinator_cfg: Optional[CoordinatorConfig] = None,
                  wire_format: str = "tb",
                  uplink_codec: Optional[str] = None,
+                 downlink_codec: Optional[str] = None,
+                 update_filter=None,
+                 topk_density: float = 0.01,
+                 topk_warmup_rounds: int = 0,
                  metrics=None):
         #: model-plane wire format for clients created via ``client()``:
         #: "tb" = zero-copy TensorBundle (default), "legacy" = msgpack
         #: ExtType (bit-identity fallback).  ``uplink_codec="int8_ef"``
-        #: turns on int8+error-feedback quantized leaf uplinks.
+        #: turns on int8+error-feedback quantized leaf uplinks;
+        #: ``uplink_codec="topk_int8_ef"`` adds magnitude top-k
+        #: sparsification at ``topk_density`` (EF residual carries the
+        #: un-sent mass; ``topk_warmup_rounds`` early rounds ship dense
+        #: int8 so the first globals aren't starved to k coordinates).
+        #: ``downlink_codec="int8"`` quantizes the retained
+        #: global broadcast.  ``update_filter`` (ParamFilter or comma
+        #: pattern string) ships only matching leaves — the LoRA-style
+        #: partial-update path for large models.
         self.wire_format = wire_format
         self.uplink_codec = uplink_codec
+        self.downlink_codec = downlink_codec
+        self.update_filter = update_filter
+        self.topk_density = topk_density
+        self.topk_warmup_rounds = topk_warmup_rounds
         transport = transport if transport is not None else SimBroker()
         if not isinstance(transport, LatencyTransport):
             transport = LatencyTransport(transport, clock=clock or SimClock(),
@@ -179,7 +195,11 @@ class Federation:
             cl = SDFLMQClient(
                 client_id, self.transport, preferred_role=preferred_role,
                 stats=stats, wire_format=self.wire_format,
-                uplink_codec=self.uplink_codec)
+                uplink_codec=self.uplink_codec,
+                downlink_codec=self.downlink_codec,
+                update_filter=self.update_filter,
+                topk_density=self.topk_density,
+                topk_warmup_rounds=self.topk_warmup_rounds)
             cl.obs = self.obs
             self.clients[client_id] = cl
         return self.clients[client_id]

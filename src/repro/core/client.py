@@ -47,6 +47,11 @@ from repro.core.wire import TensorBundle, TensorStack
 
 Params = dict[str, np.ndarray]
 
+# EF residual damping for the delta-coded top-k uplink (see
+# _quantize_uplink_topk): 0 would drop deferred mass, 1 would double-count
+# it against the self-correcting delta.
+_DELTA_EF_DECAY = 0.5
+
 
 def weighted_add(acc: Optional[Params], p: Params, w: float) -> Params:
     """Legacy reference semantics (kept as the bit-identity oracle for the
@@ -212,6 +217,93 @@ class _Accumulator:
                 np.multiply(v, w64, out=scr)
                 np.add(dst, scr, out=dst)
 
+    def add_sum_quantized(self, q_params: Params, scales: Params,
+                          w: float) -> None:
+        """Fused int8 consume: dequantize each leaf (``q.f32 * scale``) and
+        stream it straight into the f64 accumulator — bit-identical to
+        ``_dequantize`` + ``add_sum`` but never materializes the
+        model-sized dense f32 dict (the host-path analogue of the
+        ``qagg`` Pallas kernel)."""
+        w64 = np.float64(w)
+        items = [(k, np.asarray(v).shape) for k, v in q_params.items()]
+        if (self.received == 0 and self.acc_schema is not None
+                and items != [(n, s) for n, _d, s, _o, _b
+                              in self.acc_schema]):
+            self.hard_reset()            # layout changed between cycles
+        if self.flat is None:
+            self._ensure_flat(items)
+        first = self.received == 0
+        if not first and w != 1.0:
+            self._ensure_scratch()
+        for name, _d, shape, off, nb in self.acc_schema:
+            deq = np.asarray(q_params[name]).astype(np.float32)
+            deq *= np.asarray(scales[name], np.float32)
+            dst = self._views[name]
+            if first:
+                if w == 1.0:
+                    np.copyto(dst, deq)
+                else:
+                    np.multiply(deq, w64, out=dst)
+            elif w == 1.0:
+                np.add(dst, deq, out=dst)
+            else:
+                scr = np.frombuffer(memoryview(self.scratch).cast("B"),
+                                    np.float64, count=nb // 8,
+                                    offset=off).reshape(shape)
+                np.multiply(deq, w64, out=scr)
+                np.add(dst, scr, out=dst)
+
+    def add_sum_topk(self, indices: Params, q_params: Params, scales: Params,
+                     shapes: dict, w: float,
+                     base: Optional[Params] = None) -> None:
+        """Fused sparse consume for the top-k uplink codec: scatter the
+        dequantized survivors directly into the flat f64 accumulator.
+
+        With ``base=None`` the payload carries absolute values (round 0,
+        before any global exists): un-sent coordinates contribute exactly
+        0.0, so this agrees with densify-then-``add_sum`` everywhere.
+        With a ``base`` (the shared last global) the payload is
+        delta-coded: each contribution is ``base + scatter(delta)``, so
+        the base streams in densely and the sparse deltas ride on top."""
+        w64 = np.float64(w)
+        items = [(k, tuple(shapes[k])) for k in q_params]
+        if (self.received == 0 and self.acc_schema is not None
+                and items != [(n, s) for n, _d, s, _o, _b
+                              in self.acc_schema]):
+            self.hard_reset()
+        if self.flat is None:
+            self._ensure_flat(items)
+        if self.received == 0:
+            self.flat.fill(0.0)          # sparse writes need a zero base
+        for name, _d, shape, off, nb in self.acc_schema:
+            idx = np.asarray(indices[name])
+            deq = np.asarray(q_params[name]).astype(np.float32)
+            deq *= np.float32(np.asarray(scales[name]).reshape(-1)[0])
+            dst = self._views[name].reshape(-1)
+            b = None
+            if base is not None and name in base:
+                b = np.asarray(base[name], np.float32).reshape(-1)
+                if b.shape != dst.shape:
+                    b = None
+            if b is not None:
+                # delta-coded: the dense base rides every contribution
+                if w == 1.0:
+                    np.add(dst, b, out=dst)
+                else:
+                    dst += np.multiply(b, w64)
+                np.add.at(dst, idx, deq if w == 1.0
+                          else np.multiply(deq, w64))
+                continue
+            if w == 1.0:
+                if self.received == 0:
+                    dst[idx] = deq
+                else:
+                    np.add.at(dst, idx, deq)
+            elif self.received == 0:
+                dst[idx] = np.multiply(deq, w64)
+            else:
+                np.add.at(dst, idx, np.multiply(deq, w64))
+
     def partial_bundle(self) -> TensorBundle:
         """Re-frame the accumulator as a wire bundle — no re-serialization,
         the frame encoder copies the buffer once."""
@@ -310,6 +402,7 @@ class _SessionCtx:
     acc_bytes_now: int = 0                   # running total behind the peak
     stale_dropped: int = 0                   # late contributions discarded
     uplink_err: Optional[Params] = None      # int8 error-feedback residual
+    topk_base: Optional[Params] = None       # last global: top-k delta base
     # -- adversarial defense (core/defense.py; rides the topology) ------
     defense: Optional[dict] = None           # screening rules (from topology)
     reputation: dict = field(default_factory=dict)   # coordinator trust map
@@ -394,12 +487,28 @@ class SDFLMQClient:
                  preferred_role: str = "trainer",
                  stats: Optional[ClientStats] = None,
                  wire_format: str = "tb",
-                 uplink_codec: Optional[str] = None):
-        assert uplink_codec in (None, "int8_ef"), uplink_codec
+                 uplink_codec: Optional[str] = None,
+                 downlink_codec: Optional[str] = None,
+                 update_filter=None,
+                 topk_density: float = 0.01,
+                 topk_warmup_rounds: int = 0):
+        assert uplink_codec in (None, "int8_ef", "topk_int8_ef"), uplink_codec
+        assert downlink_codec in (None, "int8"), downlink_codec
         self.client_id = client_id
         self.preferred_role = preferred_role
         self.stats = stats or local_stats(client_id)
         self.uplink_codec = uplink_codec
+        self.downlink_codec = downlink_codec
+        if update_filter is not None:       # lazy: knob pulls in fl_step
+            from repro.core.fl_step import ParamFilter
+            update_filter = ParamFilter.parse(update_filter)
+        self.update_filter = update_filter
+        self.topk_density = float(topk_density)
+        self.topk_warmup_rounds = int(topk_warmup_rounds)
+        # codec telemetry (repro.obs reads these; cheap plain counters)
+        self.codec_stats = {"uplink_bytes": 0, "uplink_msgs": 0,
+                            "ef_residual_norm": 0.0,
+                            "topk_density": 1.0}
         self.fc = MQTTFC(broker, client_id, will_topic=T.will(client_id),
                          will_payload=_will_payload(client_id),
                          wire_format=wire_format)
@@ -481,8 +590,37 @@ class SDFLMQClient:
             self.obs.trace("contribute", session=session_id,
                            client=self.client_id, cluster=asg.train_cluster,
                            stamp=stamp)
-        if self.uplink_codec == "int8_ef":
-            q, scales = self._quantize_uplink(ctx)
+        ship = ctx.params
+        if self.update_filter is not None:
+            # partial update: only the filtered (adapter) subset leaves the
+            # device; the frozen base never hits the wire
+            ship = self.update_filter.extract(ctx.params)
+        # density warm-up (gradient-compression practice): the first
+        # ``topk_warmup_rounds`` rounds ship the dense int8 codec so the
+        # early globals aren't starved to k coordinates, then top-k kicks in
+        warm = (self.uplink_codec == "topk_int8_ef"
+                and ctx.round_idx < self.topk_warmup_rounds)
+        if self.uplink_codec == "topk_int8_ef" and not warm:
+            idx, q, scales, shapes = self._quantize_uplink_topk(ctx, ship)
+            payload = {"params": q, "indices": idx, "scales": scales,
+                       "shapes": shapes, "codec": "topk_int8_ef",
+                       "quantized": True, "weight": ctx.weight,
+                       "sender": self.client_id, "partial": False,
+                       "round": stamp,
+                       # delta-coded against this global version (None =
+                       # absolute values, no global seen yet)
+                       "base_version": (ctx.global_version
+                                        if ctx.topk_base is not None
+                                        else None)}
+            self._note_uplink(idx, q, scales)
+            if self.fc.wire_format == "tb":   # legacy msgpack takes dicts
+                for key in ("params", "indices", "scales"):
+                    payload[key] = TensorBundle.from_params(payload[key])
+            self.fc.call(topic, payload, quantized=True)
+            return
+        if self.uplink_codec == "int8_ef" or warm:
+            q, scales = self._quantize_uplink(ctx, ship)
+            self._note_uplink(None, q, scales)
             if self.fc.wire_format == "tb":   # legacy msgpack takes dicts
                 q = TensorBundle.from_params(q)
                 scales = TensorBundle.from_params(scales)
@@ -492,28 +630,90 @@ class SDFLMQClient:
                           "partial": False, "round": stamp},
                          quantized=True)
             return
-        params = ctx.params
+        self._note_uplink(None, ship, None)
+        params = ship
         if self.fc.wire_format == "tb":
             params = TensorBundle.from_params(params)
         self.fc.call(topic, {"params": params, "weight": ctx.weight,
                              "sender": self.client_id, "partial": False,
                              "round": stamp})
 
-    def _quantize_uplink(self, ctx: _SessionCtx):
+    def _note_uplink(self, idx, payload: Params, scales) -> None:
+        """Codec telemetry: payload bytes actually shipped this uplink."""
+        nb = sum(np.asarray(v).nbytes for v in payload.values())
+        if idx is not None:
+            nb += sum(np.asarray(v).nbytes for v in idx.values())
+        if scales is not None:
+            nb += sum(np.asarray(v).nbytes for v in scales.values())
+        cs = self.codec_stats
+        cs["uplink_bytes"] += nb
+        cs["uplink_msgs"] += 1
+
+    def _quantize_uplink(self, ctx: _SessionCtx, ship: Params):
         """int8 + error feedback, same per-row absmax scheme the compiled
         ``compressed`` schedule uses (repro.dist.compression, xp=numpy)."""
         from repro.dist import compression as C
-        if ctx.uplink_err is None:
+        if ctx.uplink_err is None or set(ctx.uplink_err) != set(ship):
             ctx.uplink_err = {k: np.zeros_like(np.asarray(v, np.float32))
-                              for k, v in ctx.params.items()}
+                              for k, v in ship.items()}
         q_params, scales = {}, {}
-        for k, v in ctx.params.items():
+        res_sq = 0.0
+        for k, v in ship.items():
             q, scale, new_err = C.quantize_with_error_feedback(
                 v, ctx.uplink_err[k], xp=np)
             q_params[k] = q
             scales[k] = np.asarray(scale, np.float32)
             ctx.uplink_err[k] = new_err
+            res_sq += float(np.dot(new_err.ravel(), new_err.ravel()))
+        self.codec_stats["ef_residual_norm"] = float(np.sqrt(res_sq))
         return q_params, scales
+
+    def _quantize_uplink_topk(self, ctx: _SessionCtx, ship: Params):
+        """Top-k + int8 + error feedback (repro.dist.compression,
+        xp=numpy): ship only the largest-magnitude ``topk_density``
+        fraction of each leaf; the EF residual carries the un-sent mass
+        forward so nothing is ever lost, only deferred.
+
+        Once a global exists the payload is *delta-coded* against it
+        (``ctx.topk_base``): sparsifying the update instead of the raw
+        weights keeps the un-sent coordinates at the shared global rather
+        than zero, so a k-sparse uplink no longer starves the model."""
+        from repro.dist import compression as C
+        if ctx.uplink_err is None or set(ctx.uplink_err) != set(ship):
+            ctx.uplink_err = {k: np.zeros_like(np.asarray(v, np.float32))
+                              for k, v in ship.items()}
+        base = ctx.topk_base
+        idx, q_params, scales, shapes = {}, {}, {}, {}
+        res_sq = 0.0
+        sent = total = 0
+        for k, v in ship.items():
+            v = np.asarray(v, np.float32)
+            delta_coded = (base is not None and k in base
+                           and np.shape(base[k]) == v.shape)
+            if delta_coded:
+                v = v - np.asarray(base[k], np.float32)
+            # In delta mode the residual is *damped*, not carried whole: a
+            # delta against the actual global partially re-derives the
+            # un-applied mass on its own (local SGD pushes the weights the
+            # same way again), so a full carry double-counts it and can
+            # ring on near-stationary clients, while dropping it entirely
+            # slows real training.  Geometric decay keeps most of the EF
+            # acceleration with a strictly bounded residual.
+            err_in = (ctx.uplink_err[k] * _DELTA_EF_DECAY if delta_coded
+                      else ctx.uplink_err[k])
+            i, q, scale, new_err = C.quantize_topk_int8_ef(
+                v, err_in, self.topk_density, xp=np)
+            idx[k] = i
+            q_params[k] = q
+            scales[k] = scale
+            shapes[k] = list(v.shape)
+            ctx.uplink_err[k] = new_err
+            res_sq += float(np.dot(new_err.ravel(), new_err.ravel()))
+            sent += int(i.size)
+            total += int(v.size)
+        self.codec_stats["ef_residual_norm"] = float(np.sqrt(res_sq))
+        self.codec_stats["topk_density"] = sent / total if total else 1.0
+        return idx, q_params, scales, shapes
 
     def wait_global_update(self, session_id: str) -> Params:
         """Synchronous in the simulated broker: delivery already happened by
@@ -681,7 +881,7 @@ class SDFLMQClient:
             if "entries" in body:                 # legacy stack partial
                 return max((delta_norm(_as_params(e["params"]))
                             for e in body["entries"]), default=0.0)
-            params = _as_params(_bundle_or_params(body))
+            params = _as_params(_bundle_or_params(body, base=ctx.topk_base))
             if body.get("partial"):
                 # flat-f64 partial sum: normalize by the carried weight so
                 # the metric is the weighted-mean member delta
@@ -752,7 +952,7 @@ class SDFLMQClient:
                         a.add_stack_row(_as_params(e["params"]),
                                         float(e["weight"]), duty.expected)
             else:
-                contrib = _bundle_or_params(body)
+                contrib = _bundle_or_params(body, base=ctx.topk_base)
                 if not self._premap_is_identity(strat):
                     # defense premaps (norm clipping) apply per leaf row,
                     # exactly once — partials forward already-clipped rows
@@ -762,8 +962,14 @@ class SDFLMQClient:
         else:
             if body.get("partial"):
                 a.add_sum(_bundle_or_params(body), 1.0)
+            elif (body.get("quantized")
+                  and self._premap_is_identity(strat)):
+                # fused consume: the int8 (or sparse top-k) payload streams
+                # straight into the f64 accumulator — the host-path twin of
+                # the qagg kernel; never materializes the dense f32 model
+                self._add_quantized(a, body, w, base=ctx.topk_base)
             else:
-                contrib = _bundle_or_params(body)
+                contrib = _bundle_or_params(body, base=ctx.topk_base)
                 if not self._premap_is_identity(strat):
                     contrib = strat.premap(_as_params(contrib),
                                            ctx.global_params, np)
@@ -773,6 +979,22 @@ class SDFLMQClient:
         ctx.note_mem(a)
         if a.received >= duty.expected:
             self._flush(sid, cluster_id)
+
+    @staticmethod
+    def _add_quantized(a: _Accumulator, body, w: float,
+                       base: Optional[Params] = None) -> None:
+        """Dispatch a quantized uplink body to the matching fused
+        accumulator path (bit-compatible with densify-then-``add_sum``)."""
+        if body.get("codec") == "topk_int8_ef":
+            a.add_sum_topk(_as_params(body["indices"]),
+                           _as_params(body["params"]),
+                           _as_params(body["scales"]),
+                           body["shapes"], w,
+                           base=(base if body.get("base_version") is not None
+                                 else None))
+        else:
+            a.add_sum_quantized(_as_params(body["params"]),
+                                _as_params(body["scales"]), w)
 
     def _on_cluster_input_async(self, sid: str, cluster_id: str, body,
                                 ctx: _SessionCtx, duty) -> None:
@@ -833,7 +1055,7 @@ class SDFLMQClient:
                 w = self._defense_screen(ctx, sid, body, w)
                 if w is None:
                     return      # K-of-N: other admissions trigger the flush
-            contrib = _bundle_or_params(body)
+            contrib = _bundle_or_params(body, base=ctx.topk_base)
             if not self._premap_is_identity(strat):
                 contrib = strat.premap(_as_params(contrib),
                                        ctx.global_params, np)
@@ -930,10 +1152,29 @@ class SDFLMQClient:
                     self.on_global_update(session_id, ctx.params, version)
             else:
                 version = ctx.global_version + 1
-            msg = {"params": TensorBundle.from_params(glob)
-                   if self.fc.wire_format == "tb" else glob,
-                   "version": version,
-                   "round": version if buf is not None else ctx.round_idx}
+            tb = self.fc.wire_format == "tb"
+            quantized_call = False
+            if self.downlink_codec == "int8":
+                # quantized retained broadcast: the downlink twin of the
+                # int8 uplink — late subscribers replay the retained int8
+                # frames and dequantize locally
+                from repro.dist import compression as C
+                qd, sd = {}, {}
+                for k, v in glob.items():
+                    q, s = C.quantize_int8(np.asarray(v, np.float32), xp=np)
+                    qd[k] = q
+                    sd[k] = np.asarray(s, np.float32)
+                msg = {"params": TensorBundle.from_params(qd) if tb else qd,
+                       "scales": TensorBundle.from_params(sd) if tb else sd,
+                       "quantized": True,
+                       "version": version,
+                       "round": version if buf is not None else ctx.round_idx}
+                quantized_call = True
+            else:
+                msg = {"params": TensorBundle.from_params(glob)
+                       if tb else glob,
+                       "version": version,
+                       "round": version if buf is not None else ctx.round_idx}
             if new_state is not None:
                 # server-optimizer state rides the retained global publish,
                 # so whichever client roots the next round resumes it
@@ -942,7 +1183,8 @@ class SDFLMQClient:
                 self.obs.trace("mint", session=session_id,
                                client=self.client_id, cluster=cluster_id,
                                version=version)
-            self.fc.call(T.global_model(session_id), msg, retain=True)
+            self.fc.call(T.global_model(session_id), msg, retain=True,
+                         quantized=quantized_call)
         if buf is not None:
             buf.flushes += 1
             buf.start_cycle()
@@ -1086,12 +1328,26 @@ class SDFLMQClient:
             if ver < ctx.global_version or (ver == ctx.global_version
                                             and not ctx.version_from_gossip):
                 return
-        ctx.params = _as_params(body["params"])
+        incoming = _as_params(_bundle_or_params(body))
+        if self.update_filter is not None and ctx.params:
+            # partial-update downlink: the aggregated (adapter) subset
+            # merges over the locally-kept frozen base
+            merged = dict(ctx.params)
+            merged.update(incoming)
+            ctx.params = merged
+        else:
+            ctx.params = incoming
         strat = self._strategy_for(ctx)
         if strat.needs_ref or strat.stateful or ctx.defense is not None:
             # only reference-using strategies pay for a retained global copy
             # (the defense norm gate also measures deltas against it)
             ctx.global_params = {k: np.array(v) for k, v in ctx.params.items()}
+        if self.uplink_codec == "topk_int8_ef":
+            # top-k delta base: both the sender (delta coding) and any
+            # aggregator duty (densify over base) key off this shared copy
+            # of the latest global
+            ctx.topk_base = {k: np.asarray(v, np.float32)
+                             for k, v in ctx.params.items()}
         if "server_state" in body:
             ctx.server_state = body["server_state"]
         ctx.global_version = body.get("version", ctx.global_version + 1)
@@ -1118,8 +1374,11 @@ def _as_params(obj) -> Params:
     return {k: np.asarray(v) for k, v in obj.items()}
 
 
-def _bundle_or_params(body) -> Union[TensorBundle, Params]:
+def _bundle_or_params(body, base: Optional[Params] = None) \
+        -> Union[TensorBundle, Params]:
     p = body["params"]
+    if body.get("codec") == "topk_int8_ef":
+        return _densify_topk(body, base)
     if body.get("quantized"):
         return _dequantize(p, body["scales"])
     return p
@@ -1132,6 +1391,25 @@ def _dequantize(q_obj, s_obj) -> Params:
     q = _as_params(q_obj)
     s = _as_params(s_obj)
     return {k: dequantize_int8(v, s[k], xp=np) for k, v in q.items()}
+
+
+def _densify_topk(body, base: Optional[Params] = None) -> Params:
+    """Top-k int8 payload -> dense float32 params (the slow path: defense
+    screening and stack strategies; the sum accumulators consume the
+    sparse form directly).  Delta-coded payloads densify over ``base``
+    (the receiver's copy of the global the sender coded against)."""
+    from repro.dist.compression import densify_topk
+    q = _as_params(body["params"])
+    idx = _as_params(body["indices"])
+    s = _as_params(body["scales"])
+    shapes = body["shapes"]
+    out = {k: densify_topk(idx[k], v, s[k], tuple(shapes[k]), xp=np)
+           for k, v in q.items()}
+    if body.get("base_version") is not None and base is not None:
+        for k, v in out.items():
+            if k in base and np.shape(base[k]) == v.shape:
+                out[k] = v + np.asarray(base[k], np.float32)
+    return out
 
 
 def _acc_bytes(ctx: _SessionCtx) -> int:

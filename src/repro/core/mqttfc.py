@@ -91,6 +91,48 @@ def decode(data: bytes) -> Any:
 _FAST_LEVEL_BYTES = 1 << 20
 
 
+def _build_control_dict() -> bytes:
+    """Preset dictionary for SMALL control frames, derived from canonical
+    SDFLMQ control payloads (join/create/heartbeat/topology shapes).  The
+    corpus is hardcoded, so every endpoint derives the IDENTICAL
+    dictionary — no wire negotiation, and the frame header's codec string
+    is all a receiver needs.  zlib reads preset dictionaries back-to-front
+    (most common substrings last)."""
+    stats = {"cpu": 1.0, "memory_mb": 1024.0, "bandwidth_mbps": 10.0,
+             "samples": 128, "battery": 1.0}
+    samples = [
+        {"a": ["train_session", "c0", "model", 0, "trainer", stats],
+         "k": {}, "s": "c0"},
+        {"a": ["train_session", "model", "c0", 8, 2, 64, 3600.0, 120.0,
+               "aggregator", stats],
+         "k": {"strategy": "fedavg", "async_cfg": None,
+               "defense_cfg": None}, "s": "c0"},
+        {"a": ["train_session", "c1"], "k": {}, "s": "c1"},
+        {"a": [{"session_id": "train_session", "round": 1, "version": 1,
+                "clusters": {"cluster_0": ["c0", "c1", "c2"]},
+                "heads": ["c0"], "root": "c0", "strategy": "fedavg",
+                "weight": 1.0, "sender": "coordinator",
+                "partial": False}], "k": {}, "s": "coordinator"},
+        {"a": ["sdflmq/session/train_session/cluster/cluster_0/agg",
+               "sdflmq/session/train_session/global",
+               "sdflmq/client/c0/ctrl"], "k": {}, "s": "param_server"},
+    ]
+    return b"".join(encode(s) for s in samples)[-32768:]
+
+
+_CONTROL_DICT = _build_control_dict()
+_ZSTD_DICT = (_zstd.ZstdCompressionDict(_CONTROL_DICT)
+              if _zstd is not None else None)
+# frames below this never try the dict codec (header + adler32 overhead)
+DICT_MIN_BYTES = 48
+
+
+def dict_codec() -> str:
+    """Dictionary-trained codec for small control frames: zstd+dict when
+    the wheel is importable, zlib's preset-dictionary mode otherwise."""
+    return "zstd+dict" if _zstd is not None else "zlib+dict"
+
+
 def compress(data, codec: str) -> bytes:
     # zlib/zstd accept any buffer-protocol object: no staging copy.
     # Large bodies (multi-MB float64 partial sums) drop to level 1: ~30%
@@ -100,14 +142,29 @@ def compress(data, codec: str) -> bytes:
         return zlib.compress(data, level=level)
     if codec == "zstd" and _zstd is not None:
         return _zstd.ZstdCompressor(level=level).compress(data)
+    if codec == "zlib+dict":
+        c = zlib.compressobj(3, zlib.DEFLATED, zlib.MAX_WBITS, 8,
+                             zlib.Z_DEFAULT_STRATEGY, _CONTROL_DICT)
+        return c.compress(data) + c.flush()
+    if codec == "zstd+dict" and _zstd is not None:
+        return _zstd.ZstdCompressor(level=3,
+                                    dict_data=_ZSTD_DICT).compress(data)
     return data
 
 
 def decompress(data, codec: str) -> bytes:
+    # dispatch is on the FRAME header's codec string, so receivers decode
+    # dictionary frames regardless of their own knobs
     if codec == "zlib":
         return zlib.decompress(data)
     if codec == "zstd" and _zstd is not None:
         return _zstd.ZstdDecompressor().decompress(data)
+    if codec == "zlib+dict":
+        d = zlib.decompressobj(zdict=_CONTROL_DICT)
+        return d.decompress(data) + d.flush()
+    if codec == "zstd+dict" and _zstd is not None:
+        return _zstd.ZstdDecompressor(
+            dict_data=_ZSTD_DICT).decompress(data)
     return data
 
 
@@ -201,7 +258,8 @@ class MQTTFC:
                  will_topic: Optional[str] = None,
                  will_payload: bytes = b"",
                  wire_format: str = "tb",
-                 max_assemblies: int = 256):
+                 max_assemblies: int = 256,
+                 control_dict: bool = True):
         assert wire_format in ("tb", "legacy"), wire_format
         self.broker = broker
         self.client_id = client_id
@@ -209,6 +267,9 @@ class MQTTFC:
         self.max_batch_bytes = max_batch_bytes
         self.codec = codec if codec is not None else default_codec()
         self.compress_threshold = compress_threshold
+        # dictionary-trained codec for small control frames (below the
+        # compress threshold, which plain compression never touches)
+        self.control_dict = control_dict
         self.wire_format = wire_format
         self.max_assemblies = max_assemblies
         self._fns: dict[str, Callable] = {}
@@ -245,6 +306,8 @@ class MQTTFC:
         self.duplicate_drops = 0
         self.compress_attempts = 0
         self.compress_wins = 0
+        self.dict_compress_wins = 0
+        self.dict_bytes_saved = 0
 
     # ---- binding ---------------------------------------------------------
     def bind(self, topic: str, fn: Callable, qos: int = 1) -> None:
@@ -287,6 +350,7 @@ class MQTTFC:
         else:
             body = encode(obj)
         self.raw_bytes_sent += len(body)
+        frame_codec = self.codec
         if quantized:
             flags |= F_QUANTIZED
         elif len(body) >= self.compress_threshold and _worth_compressing(body):
@@ -297,6 +361,20 @@ class MQTTFC:
                 flags |= F_COMPRESSED
                 self.compress_wins += 1
                 # the compressed copy supersedes the arena body
+                if arena_view is not None:
+                    self._arena.release(arena_view)
+                    arena_view = None
+        elif self.control_dict and DICT_MIN_BYTES <= len(body):
+            # small control frame: plain compression never engages below
+            # the threshold, but a shared preset dictionary seeded with
+            # canonical SDFLMQ control shapes routinely halves these
+            comp = compress(body, dict_codec())
+            if len(comp) < len(body):
+                self.dict_compress_wins += 1
+                self.dict_bytes_saved += len(body) - len(comp)
+                body = comp
+                flags |= F_COMPRESSED
+                frame_codec = dict_codec()
                 if arena_view is not None:
                     self._arena.release(arena_view)
                     arena_view = None
@@ -315,7 +393,7 @@ class MQTTFC:
             off = i * self.max_batch_bytes
             chunk = mv[off:off + self.max_batch_bytes]
             header = msgpack.packb((self.client_id, call_id, i, n_parts,
-                                    flags, self.codec, total, off))
+                                    flags, frame_codec, total, off))
             frame = bytearray(4 + len(header) + len(chunk))
             frame[0:4] = len(header).to_bytes(4, "big")
             frame[4:4 + len(header)] = header
@@ -371,6 +449,8 @@ class MQTTFC:
             "duplicate_drops": self.duplicate_drops,
             "compress_attempts": self.compress_attempts,
             "compress_wins": self.compress_wins,
+            "dict_compress_wins": self.dict_compress_wins,
+            "dict_bytes_saved": self.dict_bytes_saved,
             "arena_reuse_hits": self._arena.reuse_hits,
             "arena_grows": self._arena.grows,
             "arena_busy_allocs": self._arena.busy_allocs,

@@ -29,7 +29,13 @@ class ParameterServer:
         args = payload["a"] if isinstance(payload, dict) and "a" in payload else [payload]
         body = args[0]
         sid = topic.split("/")[2]
-        p = body["params"]
+        if body.get("quantized"):
+            # int8 downlink codec: mirror the dequantized global so readers
+            # always see plain f32 params
+            from repro.core.client import _bundle_or_params
+            p = _bundle_or_params(body)
+        else:
+            p = body["params"]
         params = (p.to_params() if isinstance(p, TensorBundle)
                   else {k: np.asarray(v) for k, v in p.items()})
         self.store[sid] = {

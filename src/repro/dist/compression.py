@@ -42,3 +42,89 @@ def quantize_with_error_feedback(x, err, xp=None):
     q, scale = quantize_int8(t, xp=xp)
     new_err = t - dequantize_int8(q, scale, xp=xp)
     return q, scale, new_err
+
+
+def _is_numpy(xp) -> bool:
+    return getattr(xp, "__name__", "").split(".")[0] == "numpy"
+
+
+def topk_count(size: int, density: float) -> int:
+    """Number of coordinates a top-k codec keeps for a flat tensor of
+    ``size`` elements at the given density (always at least one)."""
+    if size <= 0:
+        return 0
+    k = int(-(-size * float(density) // 1))  # ceil without math import
+    return max(1, min(size, k))
+
+
+def topk_sparsify(x, density, xp=None):
+    """Magnitude top-k over the *flattened* tensor.
+
+    Returns ``(idx int32, vals f32)`` with indices sorted ascending so the
+    encoding is deterministic and scatter order never matters.  numpy uses
+    O(n) ``argpartition``; jax uses ``lax.top_k``.  Tie-breaking between the
+    two backends can differ on exactly-equal magnitudes — callers that need
+    bit-parity across backends feed tie-free inputs.
+    """
+    xp = xp if xp is not None else _jnp()
+    flat = xp.asarray(x).astype(xp.float32).reshape(-1)
+    n = int(flat.shape[0])
+    k = topk_count(n, density)
+    if k == 0:
+        return (xp.zeros((0,), xp.int32), xp.zeros((0,), xp.float32))
+    mag = xp.abs(flat)
+    if k >= n:
+        idx = xp.arange(n, dtype=xp.int32)
+    elif _is_numpy(xp):
+        idx = xp.sort(xp.argpartition(mag, n - k)[n - k:]).astype(xp.int32)
+    else:
+        import jax.lax
+        _, top = jax.lax.top_k(mag, k)
+        idx = xp.sort(top).astype(xp.int32)
+    return idx, xp.take(flat, idx)
+
+
+def quantize_topk_int8_ef(x, err, density, xp=None):
+    """Top-k + int8 + error feedback: the uplink codec for large models.
+
+    Sparsifies ``x + err`` to the top ``density`` fraction of coordinates by
+    magnitude, int8-quantizes the survivors with ONE absmax scale for the
+    whole tensor, and carries *everything not sent* — the un-selected mass
+    plus the quantization residual of the selected values — in the returned
+    error-feedback residual.  Mass conservation holds by construction:
+
+        densify(idx, q, scale, shape) + new_err == x + err   (in f32)
+
+    Returns ``(idx int32, q int8, scale f32[1], new_err)`` with ``new_err``
+    shaped like ``x``.
+    """
+    xp = xp if xp is not None else _jnp()
+    t = xp.asarray(x).astype(xp.float32) + err
+    idx, vals = topk_sparsify(t, density, xp=xp)
+    amax = xp.max(xp.abs(vals)) if vals.size else xp.float32(0.0)
+    scale = (xp.where(amax > 0, amax, 1.0) / 127.0).reshape(1)
+    scale = scale.astype(xp.float32)
+    q = xp.clip(xp.round(vals / scale), -127, 127).astype(xp.int8)
+    deq = q.astype(xp.float32) * scale
+    flat = t.reshape(-1)
+    if _is_numpy(xp):
+        new_err = flat.copy()
+        new_err[idx] -= deq
+    else:
+        new_err = flat.at[idx].add(-deq)
+    return idx, q, scale, new_err.reshape(t.shape)
+
+
+def densify_topk(idx, q, scale, shape, xp=None):
+    """Scatter a top-k int8 payload back to a dense f32 tensor."""
+    xp = xp if xp is not None else _jnp()
+    n = 1
+    for d in shape:
+        n *= int(d)
+    deq = xp.asarray(q).astype(xp.float32) * xp.asarray(scale).reshape(-1)[0]
+    if _is_numpy(xp):
+        out = xp.zeros(n, xp.float32)
+        out[xp.asarray(idx)] = deq
+    else:
+        out = xp.zeros(n, xp.float32).at[xp.asarray(idx)].set(deq)
+    return out.reshape(shape)

@@ -30,6 +30,43 @@ def _fedavg_kernel(w_ref, x_ref, o_ref):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _qagg_kernel(w_ref, q_ref, s_ref, o_ref):
+    # q_ref: (K, RB, G) int8 tile; s_ref: (K, RB, 1) per-row scales;
+    # w_ref: (K, 1, 1) client weights.  Dequantize on the VPU and reduce the
+    # client axis in f32 — the int8 payload is the only (K, N)-sized HBM
+    # traffic; the f32 upcast never leaves VMEM.
+    x = q_ref[...].astype(jnp.float32) * s_ref[...]
+    acc = jnp.sum(x * w_ref[...], axis=0)               # (RB, G)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def qagg_pallas(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                rows_block: int, interpret: bool = False):
+    """Fused dequantize + weighted-sum over clients.
+
+    q: (K, R, G) int8 — R rows of G-wide quantization groups (G is the
+    tensor's last dim, matching ``quantize_int8``'s per-row scales);
+    scales: (K, R, 1) f32; weights: (K,).  Callers pad R to a multiple of
+    ``rows_block``.  Tiles are (K, rows_block, G) so every tile covers whole
+    quantization groups; very large G degrades to one row per tile.
+    """
+    K, R, G = q.shape
+    assert R % rows_block == 0, (R, rows_block)
+    grid = (R // rows_block,)
+    return pl.pallas_call(
+        _qagg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K, rows_block, G), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, rows_block, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_block, G), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, G), jnp.float32),
+        interpret=interpret,
+    )(weights.reshape(K, 1, 1).astype(jnp.float32), q, scales)
+
+
 def fedavg_pallas(stacked: jax.Array, weights: jax.Array,
                   block: int = DEFAULT_BLOCK, interpret: bool = False):
     """stacked: (K, N) with N % block == 0 (callers pad); weights: (K,)."""

@@ -6,8 +6,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.fedavg import DEFAULT_BLOCK, fedavg_pallas
-from repro.kernels.fedavg.ref import fedavg_ref
+from repro.kernels.fedavg.fedavg import (DEFAULT_BLOCK, fedavg_pallas,
+                                         qagg_pallas)
+from repro.kernels.fedavg.ref import fedavg_ref, qagg_ref
 
 
 def _pad_flat(x_flat: jax.Array, block: int):
@@ -36,6 +37,35 @@ def fedavg(stacked: jax.Array, weights: jax.Array,
     out = fedavg_pallas(padded, weights, block=min(block, padded.shape[1]),
                         interpret=interpret)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def qagg(q: jax.Array, scales: jax.Array, weights: jax.Array,
+         force: str = "auto") -> jax.Array:
+    """Fused int8 dequantize + weighted sum over the leading client axis.
+
+    q: (K, *shape) int8 with ``quantize_int8``-style per-last-dim-row scales
+    (K, *shape[:-1], 1).  Returns the f32 weighted sum shaped ``shape``.
+    force: "pallas" (interpret on CPU), "ref", or "auto"."""
+    K = q.shape[0]
+    shape = q.shape[1:]
+    G = shape[-1] if shape else 1
+    q3 = q.reshape(K, -1, G)
+    s3 = scales.reshape(K, -1, 1)
+    use = force
+    if use == "auto":
+        use = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use == "ref":
+        return qagg_ref(q3, s3, weights).reshape(shape)
+    interpret = jax.default_backend() != "tpu"
+    R = q3.shape[1]
+    rows_block = max(1, min(R, DEFAULT_BLOCK // max(G, 1)))
+    pad = (-R) % rows_block
+    if pad:
+        q3 = jnp.pad(q3, ((0, 0), (0, pad), (0, 0)))
+        s3 = jnp.pad(s3, ((0, 0), (0, pad), (0, 0)))
+    out = qagg_pallas(q3, s3, weights, rows_block, interpret=interpret)
+    return out[:R].reshape(shape)
 
 
 def fedavg_pytree(params_stacked, weights, force: str = "auto"):

@@ -12,6 +12,19 @@ def fedavg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return (acc / jnp.sum(w)).astype(stacked.dtype)
 
 
+def qagg_ref(q: jnp.ndarray, scales: jnp.ndarray,
+             weights: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused int8 dequantize+aggregate kernel.
+
+    q: (K, R, G) int8; scales: (K, R, 1) f32; weights: (K,).  Mirrors the
+    compiled "compressed" schedule's math exactly — dequantize each client's
+    contribution, scale by its weight, plain ``sum`` over the client axis —
+    so weights of 1.0 reproduce dequantize-then-sum bit-for-bit."""
+    w = weights.astype(jnp.float32).reshape(-1, 1, 1)
+    x = q.astype(jnp.float32) * scales
+    return jnp.sum(x * w, axis=0)
+
+
 def fedavg_tree_ref(stacked, weights, groups):
     """Hierarchical reference: per-group weighted sums, then combine —
     mathematically identical to fedavg_ref (associativity)."""

@@ -44,12 +44,14 @@ class SDFLMQTrainer:
                  batch_per_client: int, seq: int, ckpt_dir: str | None = None,
                  schedule_kind: str = "tree", seed: int = 0,
                  failure_plan: FailurePlan | None = None,
-                 strategy: str = "fedavg"):
+                 strategy: str = "fedavg",
+                 update_filter=None):
         self.cfg, self.mesh, self.rounds = cfg, mesh, rounds
         self.n = n_clients
         self.batch_per_client, self.seq = batch_per_client, seq
         self.schedule_kind = schedule_kind
         self.strategy = strategy
+        self.update_filter = update_filter
         self.failures = failure_plan or FailurePlan()
 
         # ---- control plane (via the repro.api facade) ----------------
@@ -75,7 +77,8 @@ class SDFLMQTrainer:
         # ---- data plane ----------------------------------------------
         self.data = FederatedTokens(cfg.vocab, n_clients, seed=seed)
         self.state = init_state(cfg, mesh, jax.random.PRNGKey(seed),
-                                total_steps=rounds * cfg.fl.local_steps)
+                                total_steps=rounds * cfg.fl.local_steps,
+                                update_filter=update_filter)
         self._compiled = {}
         self.ckpt = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
         self.start_round = 0
@@ -102,7 +105,8 @@ class SDFLMQTrainer:
         if key not in self._compiled:
             self._compiled[key] = jax.jit(
                 build_fl_round_step(self.cfg, self.mesh, schedule,
-                                    strategy=self.strategy))
+                                    strategy=self.strategy,
+                                    update_filter=self.update_filter))
         return self._compiled[key]
 
     def run(self) -> list[dict]:
@@ -158,6 +162,10 @@ def main():
                     choices=["tree", "flat", "rs_ag"])
     ap.add_argument("--strategy", default="fedavg",
                     help="aggregation strategy (repro.api.strategies)")
+    ap.add_argument("--update-filter", default=None,
+                    help="partial-update ParamFilter patterns "
+                         "(comma-separated globs, ! prefix excludes); only "
+                         "matching leaves train and aggregate")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data-mesh", type=int, default=0,
                     help="data axis size (0 = #clients)")
@@ -181,7 +189,8 @@ def main():
                             args.batch_per_client, args.seq,
                             ckpt_dir=args.ckpt_dir,
                             schedule_kind=args.schedule,
-                            strategy=args.strategy)
+                            strategy=args.strategy,
+                            update_filter=args.update_filter)
     for m in trainer.run():
         print(f"round {m['round']:3d} loss {m['loss']:.4f} "
               f"{m['time_s']:.2f}s sched={m['schedule']} "

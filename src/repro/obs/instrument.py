@@ -119,6 +119,25 @@ class Telemetry:
                     set_numeric(f"sdflmq_wire_{k}", "MQTTFC wire stat", v,
                                 client=cid)
 
+            # Codec stats (uplink bytes, error-feedback residual, top-k
+            # density).  Exported for every client even with codecs off —
+            # the series sit at their defaults so dashboards and the CI
+            # scrape gate always see them.
+            for cid, cl in getattr(fed, "clients", {}).items():
+                cs = getattr(cl, "codec_stats", None)
+                if cs is None:
+                    continue
+                codec = getattr(cl, "uplink_codec", None) or "none"
+                set_numeric("sdflmq_wire_uplink_bytes",
+                            "Model-update uplink payload bytes shipped",
+                            cs.get("uplink_bytes", 0), client=cid, codec=codec)
+                set_numeric("sdflmq_codec_ef_residual_norm",
+                            "Error-feedback residual L2 norm after last uplink",
+                            cs.get("ef_residual_norm", 0.0), client=cid)
+                set_numeric("sdflmq_topk_density",
+                            "Fraction of update entries shipped last uplink",
+                            cs.get("topk_density", 1.0), client=cid)
+
             # Per-duty accumulator arenas + async counters (client contexts).
             for cid, cl in getattr(fed, "clients", {}).items():
                 for sid, ctx in cl.models.sessions.items():

@@ -1,0 +1,225 @@
+"""Property tests for ``repro.dist.compression`` — the shared quantizer
+behind the compiled "compressed" schedule AND the host MQTT uplink codecs.
+
+Properties locked down:
+  * int8 round-trip error is bounded by half a quantization step per row,
+  * error feedback conserves mass exactly: dequantized + residual == input,
+  * top-k EF conservation: densify(sent) + residual == input, including the
+    un-sent coordinates (they ride the residual untouched),
+  * top-k index invariants: sorted, unique, in-range, correct count, and
+    the selected magnitudes dominate the rejected ones,
+  * degenerate inputs (zeros, constants, denormals, empty tensors) neither
+    crash nor produce non-finite outputs,
+  * the numpy and jax.numpy code paths agree bit-for-bit on tie-free
+    inputs (the host uplink and the compiled schedule share one codec).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dist import compression as C
+
+
+def _arr(seed: int, shape, spread: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x * np.float32(10.0 ** spread)
+
+
+# ---------------------------------------------------------------------------
+# int8 row quantizer
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 8),
+       cols=st.integers(1, 96), spread=st.integers(-3, 3))
+@settings(max_examples=25, deadline=None)
+def test_int8_roundtrip_error_bound(seed, rows, cols, spread):
+    x = _arr(seed, (rows, cols), spread)
+    q, s = C.quantize_int8(x, xp=np)
+    assert q.dtype == np.int8 and s.shape == (rows, 1)
+    err = np.abs(C.dequantize_int8(q, s, xp=np) - x)
+    assert np.all(err <= s / 2 + np.abs(x) * 1e-6 + 1e-12)
+
+
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 6),
+       cols=st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_ef_conservation_and_bounded_residual(seed, rows, cols):
+    x = _arr(seed, (rows, cols))
+    err0 = _arr(seed + 1, (rows, cols)) * np.float32(0.01)
+    q, s, new_err = C.quantize_with_error_feedback(x, err0, xp=np)
+    # mass conservation: what was dequantized plus what is carried forward
+    # is exactly what went in
+    np.testing.assert_allclose(C.dequantize_int8(q, s, xp=np) + new_err,
+                               x + err0, rtol=1e-6, atol=1e-6)
+    # the residual never exceeds half a quantization step
+    assert np.all(np.abs(new_err) <= s / 2 + 1e-6)
+
+
+def test_repeated_ef_rounds_do_not_drift():
+    x = _arr(7, (4, 32))
+    err = np.zeros_like(x)
+    for _ in range(25):
+        q, s, err = C.quantize_with_error_feedback(x, err, xp=np)
+        assert np.all(np.abs(err) <= s / 2 + 1e-6)
+        assert np.all(np.isfinite(err))
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsifier + the combined uplink codec
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(0, 100_000), density=st.floats(1e-6, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_topk_count_properties(n, density):
+    k = C.topk_count(n, density)
+    if n == 0:
+        assert k == 0
+    else:
+        assert 1 <= k <= n
+        assert C.topk_count(n, 1.0) == n
+        assert C.topk_count(n, density / 2) <= k   # monotone in density
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 400),
+       density=st.floats(0.001, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_topk_index_invariants(seed, n, density):
+    x = _arr(seed, (n,))
+    idx, vals = C.topk_sparsify(x, density, xp=np)
+    k = C.topk_count(n, density)
+    assert idx.shape == (k,) and vals.shape == (k,)
+    assert idx.dtype == np.int32
+    assert np.all(np.diff(idx) > 0)                   # sorted, unique
+    assert idx.min() >= 0 and idx.max() < n
+    np.testing.assert_array_equal(vals, x[idx])
+    # magnitude dominance: nothing rejected beats anything selected
+    mask = np.zeros(n, bool)
+    mask[idx] = True
+    if k < n:
+        assert np.abs(x[idx]).min() >= np.abs(x[~mask]).max()
+
+
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 6),
+       cols=st.integers(1, 48), density=st.floats(0.01, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_topk_ef_mass_conservation(seed, rows, cols, density):
+    x = _arr(seed, (rows, cols))
+    err0 = _arr(seed + 1, (rows, cols)) * np.float32(0.05)
+    idx, q, scale, new_err = C.quantize_topk_int8_ef(x, err0, density, xp=np)
+    assert q.dtype == np.int8 and scale.shape == (1,)
+    assert new_err.shape == x.shape
+    dense = C.densify_topk(idx, q, scale, x.shape, xp=np)
+    # sent + residual == input, exactly (un-sent coordinates ride the
+    # residual untouched; sent ones carry only their quantization error)
+    np.testing.assert_allclose(dense + new_err, x + err0,
+                               rtol=1e-6, atol=1e-6)
+    # un-selected coordinates are exactly the input in the residual
+    t = (x + err0).reshape(-1)
+    mask = np.zeros(t.size, bool)
+    mask[idx] = True
+    np.testing.assert_array_equal(new_err.reshape(-1)[~mask], t[~mask])
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 256),
+       density=st.floats(0.01, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_densify_scatter_roundtrip(seed, n, density):
+    x = _arr(seed, (n,))
+    idx, q, scale, _ = C.quantize_topk_int8_ef(x, np.float32(0.0), density,
+                                               xp=np)
+    dense = C.densify_topk(idx, q, scale, (n,), xp=np)
+    mask = np.zeros(n, bool)
+    mask[idx] = True
+    assert np.all(dense[~mask] == 0.0)
+    np.testing.assert_array_equal(dense[mask],
+                                  q.astype(np.float32) * scale[0])
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs
+# ---------------------------------------------------------------------------
+
+def test_zero_input_edges():
+    x = np.zeros((3, 8), np.float32)
+    q, s = C.quantize_int8(x, xp=np)
+    assert np.all(q == 0) and np.all(s == np.float32(1.0 / 127.0))
+    np.testing.assert_array_equal(C.dequantize_int8(q, s, xp=np), x)
+    idx, qq, sc, err = C.quantize_topk_int8_ef(x, np.zeros_like(x), 0.25,
+                                               xp=np)
+    assert np.all(qq == 0) and np.all(err == 0.0)
+    np.testing.assert_array_equal(
+        C.densify_topk(idx, qq, sc, x.shape, xp=np), x)
+
+
+def test_constant_input_edges():
+    x = np.full((2, 16), 3.7, np.float32)
+    q, s = C.quantize_int8(x, xp=np)
+    assert np.all(q == 127)
+    err = np.abs(C.dequantize_int8(q, s, xp=np) - x)
+    assert np.all(err <= s / 2 + 1e-6)
+
+
+def test_denormal_input_edges():
+    x = np.full((4,), 1e-42, np.float32)          # subnormal f32
+    q, s = C.quantize_int8(x, xp=np)
+    assert np.all(np.isfinite(s))
+    assert np.all(np.isfinite(C.dequantize_int8(q, s, xp=np)))
+    idx, qq, sc, err = C.quantize_topk_int8_ef(x, np.zeros_like(x), 0.5,
+                                               xp=np)
+    assert np.all(np.isfinite(err)) and np.all(np.isfinite(sc))
+
+
+def test_empty_tensor_edges():
+    x = np.zeros((0,), np.float32)
+    idx, vals = C.topk_sparsify(x, 0.5, xp=np)
+    assert idx.size == 0 and vals.size == 0
+    i2, q2, s2, e2 = C.quantize_topk_int8_ef(x, x.copy(), 0.5, xp=np)
+    assert i2.size == 0 and q2.size == 0 and e2.size == 0
+    assert C.densify_topk(i2, q2, s2, (0,), xp=np).shape == (0,)
+    assert C.topk_count(0, 0.5) == 0
+
+
+# ---------------------------------------------------------------------------
+# numpy <-> jax.numpy parity (the two halves of the shared codec)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def jnp():
+    return pytest.importorskip("jax.numpy")
+
+
+def _tie_free(seed: int, n: int) -> np.ndarray:
+    """Strictly distinct magnitudes -> top-k selection is unambiguous, so
+    both backends must agree bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    mags = np.linspace(0.5, 2.0, n, dtype=np.float32)
+    signs = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    return rng.permutation(mags) * signs
+
+
+@pytest.mark.parametrize("seed,n", [(0, 17), (1, 64), (2, 255)])
+def test_int8_np_jnp_parity(jnp, seed, n):
+    x = _tie_free(seed, n).reshape(1, -1)
+    qn, sn = C.quantize_int8(x, xp=np)
+    qj, sj = C.quantize_int8(jnp.asarray(x), xp=jnp)
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_array_equal(sn, np.asarray(sj))
+
+
+@pytest.mark.parametrize("seed,n,density", [(3, 33, 0.1), (4, 128, 0.25),
+                                            (5, 300, 0.03)])
+def test_topk_np_jnp_parity(jnp, seed, n, density):
+    x = _tie_free(seed, n)
+    err = np.zeros_like(x)
+    inp, qnp, snp, enp = C.quantize_topk_int8_ef(x, err, density, xp=np)
+    ijx, qjx, sjx, ejx = C.quantize_topk_int8_ef(
+        jnp.asarray(x), jnp.asarray(err), density, xp=jnp)
+    np.testing.assert_array_equal(inp, np.asarray(ijx))
+    np.testing.assert_array_equal(qnp, np.asarray(qjx))
+    np.testing.assert_array_equal(snp, np.asarray(sjx))
+    np.testing.assert_allclose(enp, np.asarray(ejx), rtol=1e-6, atol=1e-7)
+    dn = C.densify_topk(inp, qnp, snp, x.shape, xp=np)
+    dj = C.densify_topk(ijx, qjx, sjx, x.shape, xp=jnp)
+    np.testing.assert_array_equal(dn, np.asarray(dj))

@@ -313,6 +313,46 @@ def test_retained_multipart_replay(backend):
     np.testing.assert_array_equal(got2[0], small)
 
 
+def test_retained_quantized_global_replay(backend):
+    """The int8 downlink codec composes with retained replay: a quantized
+    multi-frame global (the exact message shape the root's ``_flush``
+    publishes with ``downlink_codec="int8"``) survives late-subscriber
+    replay on every backend, and the reassembled payload dequantizes to
+    the published global within the int8 error bound."""
+    from repro.core.client import _as_params, _bundle_or_params
+    from repro.dist.compression import quantize_int8
+
+    rng = np.random.default_rng(3)
+    glob = {"w/kernel": rng.standard_normal((16, 32)).astype(np.float32),
+            "b/bias": rng.standard_normal((64,)).astype(np.float32)}
+    qd, sd = {}, {}
+    for k, v in glob.items():
+        q, s = quantize_int8(v, xp=np)
+        qd[k], sd[k] = q, np.asarray(s, np.float32)
+    msg = {"params": qd, "scales": sd, "quantized": True,
+           "version": 3, "round": 3}
+    pub = MQTTFC(backend.transport, "qpub", max_batch_bytes=256,
+                 compress_threshold=1 << 30)
+    pub.call("sdflmq/session/q/global", msg, retain=True, quantized=True)
+    backend.settle()
+    assert pub.wire_stats()["parts_sent"] > 1       # genuinely multi-part
+
+    got = []
+    late = MQTTFC(backend.transport, "qlate", compress_threshold=1 << 30)
+    late.subscribe_raw("sdflmq/session/q/global",
+                       lambda t, p: got.append(p["a"][0]))
+    backend.settle()
+    assert len(got) == 1                            # reassembled exactly once
+    body = got[0]
+    assert body.get("quantized") and body.get("version") == 3
+    params = _as_params(_bundle_or_params(body))
+    for k, v in glob.items():
+        assert params[k].shape == v.shape
+        assert params[k].dtype == np.float32
+        bound = float(np.abs(v).max()) / 127.0 + 1e-6
+        np.testing.assert_allclose(params[k], v, atol=bound)
+
+
 def test_frame_part_info_sniffer_tolerates_opaque_payloads():
     """The retained-store sniffer must never misparse application bytes."""
     import msgpack
